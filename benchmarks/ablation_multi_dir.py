@@ -1,0 +1,61 @@
+"""Beyond-paper ablation: K-direction ZO at a fixed forward-pass budget.
+
+Each local step can average K independent perturbation directions
+(core/zo.py n_dirs): K x forwards per step for ~1/K estimator variance,
+upload = K scalars/step, virtual path still exact (tests/test_core_zo).
+At a fixed total-forwards budget, is it better to take many noisy steps
+(K=1, paper) or fewer averaged ones (K>1)?
+
+Theory guess: with the stability-limited lr fixed, variance reduction
+lets K>1 run a larger lr; at the same lr, K=1's extra steps usually win.
+We report both at their per-K tuned lr.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import make_local_run, round_keys
+
+
+def run(quick: bool = True, seed: int = 0, density: float = 1e-2,
+        budget: int = 600) -> dict:
+    prob = C.build_problem(seed=seed)
+    space = C.make_space(prob, "meerkat", density=density)
+    client = C.make_clients(prob, 1, "iid", seed=seed, batch_size=32)[0]
+    rows = []
+    for K, lr in [(1, 5e-2), (2, 1e-1), (4, 2e-1)]:
+        T = budget // K
+        client.ptr = 0
+        run_fn = make_local_run(prob.loss, space, eps=C.ZO_EPS, lr=lr,
+                                n_dirs=K)
+        keys = round_keys(seed, 0, T)
+        batches = {k: jnp.asarray(v) for k, v in
+                   client.next_batches(T).items()}
+        import jax
+        delta, gs = jax.jit(run_fn)(prob.params, keys, batches,
+                                    jnp.zeros((space.n,), jnp.float32))
+        m = prob.evaluate(space.add(prob.params, delta), prob.eval_batch)
+        rows.append(dict(K=K, T=T, lr=lr, forwards=2 * K * T,
+                         acc=float(m["acc"]), loss=float(m["loss"])))
+        print(f"  K={K} T={T:4d} lr={lr:.0e} acc={float(m['acc']):.3f} "
+              f"loss={float(m['loss']):.3f}")
+    accs = {r["K"]: r["acc"] for r in rows}
+    return {"table": "ablation_multi_dir", "rows": rows,
+            "claim_all_configs_learn": bool(min(accs.values()) > 0.4)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    res = run(quick=not a.full, seed=a.seed)
+    print("saved:", C.save_result("ablation_multi_dir", res))
+
+
+if __name__ == "__main__":
+    main()

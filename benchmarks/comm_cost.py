@@ -1,0 +1,70 @@
+"""Paper §2.3 communication claim: MEERKAT's payloads vs Full-FedZO.
+
+Two parts:
+1. *Measured* — run a few rounds of each server on the tiny problem and
+   read the CommLog (upload = T scalars for every ZO method; download =
+   aggregated scalars + seed at high frequency, or the space's value
+   vector at low frequency vs the dense model for Full-FedZO).
+2. *Analytic at paper scale* — for every assigned architecture, bytes per
+   round per client at u=1e-3: dense model refresh vs sparse refresh vs
+   scalar-only high-frequency sync.  The >=1000x saving is structural.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common as C
+from repro.configs import ASSIGNED
+from repro.models.init import param_count
+
+
+def run(quick: bool = True, seed: int = 0, T: int = 10,
+        density: float = 1e-3) -> dict:
+    prob = C.build_problem(seed=seed)
+    measured = {}
+    for method in ["meerkat", "full"]:
+        srv = C.make_server(prob, method, T=T, seed=seed)
+        srv.run(3)
+        per_round_client = {
+            "up_bytes": srv.comm.up_bytes / (3 * len(srv.clients)),
+            "down_bytes": srv.comm.down_bytes / (3 * len(srv.clients)),
+        }
+        measured[method] = per_round_client
+        print(f"  measured {method:8s} up={per_round_client['up_bytes']:.0f}B "
+              f"down={per_round_client['down_bytes']:.0f}B /round/client")
+    ratio_measured = (measured["full"]["down_bytes"]
+                      / max(1.0, measured["meerkat"]["down_bytes"]))
+
+    analytic = []
+    for name, cfg in sorted(ASSIGNED.items()):
+        d = param_count(cfg)
+        n = max(1, int(d * density))
+        dense_b = 4 * d
+        sparse_b = 4 * n
+        scalars_b = 4 * T + 8
+        analytic.append(dict(arch=name, n_params=d,
+                             dense_refresh_bytes=dense_b,
+                             sparse_refresh_bytes=sparse_b,
+                             highfreq_scalar_bytes=scalars_b,
+                             saving_sparse=dense_b / sparse_b,
+                             saving_highfreq=dense_b / scalars_b))
+        print(f"  {name:24s} d={d/1e9:8.2f}B dense={dense_b/1e9:8.2f}GB "
+              f"sparse={sparse_b/1e6:7.1f}MB x{dense_b/sparse_b:,.0f} "
+              f"scalars={scalars_b}B x{dense_b/scalars_b:.1e}")
+    min_saving = min(a["saving_sparse"] for a in analytic)
+    return {"table": "comm_cost", "measured": measured,
+            "measured_down_ratio": ratio_measured, "analytic": analytic,
+            "claim_1000x": bool(min_saving >= 990)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    res = run(quick=not a.full, seed=a.seed)
+    print("saved:", C.save_result("comm_cost", res))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Shared harness for the paper-table benchmarks.
+
+Builds the reduced-scale (CPU-feasible) federated fine-tuning problem:
+tiny decoder LM + synthetic classification-LM tasks + Dirichlet / IID /
+single-label client partitions, and a FederatedZO server per method
+(MEERKAT sensitivity mask / weight-magnitude / random / Full-FedZO dense /
+LoRA-FedZO).  Every benchmark module calls into this and reports a dict
+that `benchmarks/run.py` collects into runs/bench/*.json.
+
+Scale note (DESIGN.md §7): the paper's GLUE tasks + 1-2B models are replaced
+by a distribution-equivalent synthetic family + a 2-layer model; claims
+checked here are *directional* (method orderings, dynamics), the full-size
+configs are exercised structurally by the dry-run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.configs.tiny import TINY, TINY_LORA
+from repro.core import (Client, DenseSpace, FederatedZO, LoRASpace,
+                        magnitude_mask, pretrain_gradient_vec, random_mask,
+                        sensitivity_mask)
+from repro.data.corpus import pretrain_batches
+from repro.data.partition import (dirichlet_partition, iid_partition,
+                                  single_label_partition, subset)
+from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset
+from repro.models import Model
+
+RUNS_DIR = os.path.join(os.path.dirname(__file__), "..", "runs", "bench")
+
+# Benchmark-wide reduced-scale defaults.
+SPEC = TaskSpec(vocab=512, n_classes=4, seq_len=16, topic_tokens=24)
+N_TRAIN = 2048
+N_EVAL = 512
+DENSITY = 1e-2          # u for the tiny model (paper: 1e-3 at 1-2B params)
+ZO_LR = 2e-3
+ZO_EPS = 1e-3
+BATCH = 16
+
+
+@dataclass
+class Problem:
+    model: Model
+    params: dict
+    loss: callable          # mean classification loss
+    per_example: callable
+    evaluate: callable      # jitted -> {loss, acc}
+    spec: TaskSpec
+    train: Dict[str, np.ndarray]
+    eval_batch: Dict[str, jnp.ndarray]
+    pretrain: list          # C4-proxy batches (for masks + GradIP)
+
+    def lm_loss(self, params, batch):
+        return self.model.loss(params, batch)
+
+
+def build_problem(seed: int = 0, lora: bool = False,
+                  spec: TaskSpec = SPEC) -> Problem:
+    cfg = TINY_LORA if lora else TINY
+    model = Model(cfg)
+    params = model.init(jax.random.key(seed))
+    loss, per_example, evaluate = make_task_fns(model, spec)
+    train = sample_dataset(spec, N_TRAIN, seed=seed + 1)
+    ev = sample_dataset(spec, N_EVAL, seed=seed + 2)
+    eval_batch = {k: jnp.asarray(v) for k, v in ev.items()}
+    pre = [{k: jnp.asarray(v) for k, v in b.items()}
+           for b in pretrain_batches(spec, n_batches=8, batch_size=32,
+                                     seed=seed + 3)]
+    return Problem(model, params, loss, per_example, evaluate, spec,
+                   train, eval_batch, pre)
+
+
+def make_space(problem: Problem, method: str, density: float = DENSITY,
+               seed: int = 0):
+    """method in {meerkat, magnitude, random, full, lora}."""
+    p = problem.params
+    if method == "meerkat":
+        # sensitivity on *pre-training* LM loss (transferable mask, §2.1)
+        return sensitivity_mask(problem.lm_loss, p, problem.pretrain, density)
+    if method == "magnitude":
+        return magnitude_mask(p, density)
+    if method == "random":
+        return random_mask(p, density, seed=seed, balanced=False)
+    if method == "full":
+        return DenseSpace(p)
+    if method == "lora":
+        return LoRASpace(p)
+    raise ValueError(method)
+
+
+def make_clients(problem: Problem, n_clients: int, partition: str,
+                 alpha: float = 0.5, seed: int = 0,
+                 batch_size: int = BATCH) -> List[Client]:
+    labels = problem.train["label"]
+    if partition == "iid":
+        parts = iid_partition(len(labels), n_clients, seed=seed)
+    elif partition == "dirichlet":
+        parts = dirichlet_partition(labels, n_clients, alpha, seed=seed)
+    elif partition == "single_label":
+        parts = single_label_partition(labels, n_clients, seed=seed)
+    else:
+        raise ValueError(partition)
+    return [Client(k, subset(problem.train, parts[k]), batch_size)
+            for k in range(n_clients)]
+
+
+def make_server(problem: Problem, method: str, *, partition: str = "dirichlet",
+                alpha: float = 0.5, T: int = 1, n_clients: int = 8,
+                density: float = DENSITY, lr: float = ZO_LR,
+                eps: float = ZO_EPS, seed: int = 0,
+                rounds: int = 0) -> FederatedZO:
+    space = make_space(problem, method, density=density, seed=seed)
+    fl = FLConfig(n_clients=n_clients, rounds=rounds, local_steps=T, lr=lr,
+                  eps=eps, density=density, mask_kind=method, seed=seed,
+                  batch_size=BATCH)
+    clients = make_clients(problem, n_clients, partition, alpha=alpha,
+                           seed=seed)
+    return FederatedZO(problem.loss, problem.params, space, fl, clients,
+                       eval_fn=problem.evaluate)
+
+
+def final_metrics(server: FederatedZO, problem: Problem) -> Dict[str, float]:
+    m = server.eval_fn(server.params, problem.eval_batch)
+    return {k: float(v) for k, v in m.items()}
+
+
+def gp_vector(problem: Problem, space) -> jnp.ndarray:
+    """Server-held pre-training gradient restricted to the space (GradIP)."""
+    return pretrain_gradient_vec(problem.lm_loss, problem.params, space,
+                                 problem.pretrain)
+
+
+def save_result(name: str, result: dict) -> str:
+    os.makedirs(RUNS_DIR, exist_ok=True)
+    path = os.path.join(RUNS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=float)
+    return os.path.abspath(path)
+
+
+def timed(fn, *a, **kw):
+    t0 = time.time()
+    out = fn(*a, **kw)
+    return out, time.time() - t0

@@ -1,0 +1,93 @@
+"""Paper Figure 3 / 7-11 + Figure 8: the GradIP phenomenon.
+
+Track GradIP (Definition 2.3), the local ZO gradient norm, and the cosine
+between the local and pre-training gradients over 100 local steps for an
+IID client and a single-label (extreme Non-IID) client.
+
+Claims checked (RQ2 / Claim 2):
+* GradIP magnitude of the extreme Non-IID client decays toward zero; the
+  IID client's keeps oscillating (later-phase mean stays high).
+* The cosine stays near-orthogonal for both (Fig. 8a) — the gradient-norm
+  trajectory is the driver (Fig. 8b).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import gradip_trajectory, make_local_run, round_keys
+
+
+def _client_trajectory(prob, space, client, T, lr, eps, seed):
+    run = make_local_run(prob.loss, space, eps=eps, lr=lr)
+    keys = round_keys(seed, 0, T)
+    b = client.next_batches(T)
+    batches = {k: jnp.asarray(v) for k, v in b.items()}
+    _, gs = jax.jit(run)(prob.params, keys, batches,
+                         jnp.zeros((space.n,), jnp.float32))
+    return gs
+
+
+def run(quick: bool = True, seed: int = 0, T: int = 200,
+        lr: float = 5e-2, density: float = 5e-2) -> dict:
+    """density 5e-2 mirrors the paper's Fig. 3 setting (5e-3 at 1B params):
+    the masked subspace must hold enough capacity for a single-label client
+    to *locally converge* within the trajectory — that convergence is the
+    GradIP decay."""
+    prob = C.build_problem(seed=seed)
+    space = C.make_space(prob, "meerkat", density=density)
+    gp = C.gp_vector(prob, space)
+    clients_iid = C.make_clients(prob, 4, "iid", seed=seed, batch_size=32)
+    clients_nid = C.make_clients(prob, 4, "single_label", seed=seed,
+                                 batch_size=32)
+    keys = round_keys(seed, 0, T)
+
+    out = {}
+    for tag, client in [("iid", clients_iid[0]), ("noniid", clients_nid[0])]:
+        gs = _client_trajectory(prob, space, client, T, lr, C.ZO_EPS, seed)
+        ips, norms, coss = gradip_trajectory(space, keys, gs, gp)
+        ips, norms, coss = (np.abs(np.asarray(x)) for x in (ips, norms, coss))
+        n0 = max(1, T // 5)
+        out[tag] = dict(
+            gradip=np.asarray(ips).tolist(),
+            init_avg=float(ips[:n0].mean()),
+            later_avg=float(ips[-n0:].mean()),
+            norm_init=float(norms[:n0].mean()),
+            norm_later=float(norms[-n0:].mean()),
+            cos_mean=float(coss.mean()),
+        )
+        out[tag]["rho_later"] = out[tag]["init_avg"] / (
+            out[tag]["later_avg"] + 1e-12)
+        print(f"  {tag:7s} GradIP init={out[tag]['init_avg']:.3f} "
+              f"later={out[tag]['later_avg']:.3f} "
+              f"rho={out[tag]['rho_later']:.2f} |cos|={out[tag]['cos_mean']:.3f}")
+
+    return {
+        "table": "fig3_gradip", "T": T, "density": density,
+        "iid": out["iid"], "noniid": out["noniid"],
+        # Non-IID decays much harder than IID oscillates
+        "claim_noniid_decays_faster": bool(
+            out["noniid"]["rho_later"] > 2.0 * out["iid"]["rho_later"]),
+        "claim_norms_mirror_gradip": bool(
+            out["noniid"]["norm_later"] / (out["noniid"]["norm_init"] + 1e-12)
+            < out["iid"]["norm_later"] / (out["iid"]["norm_init"] + 1e-12)),
+        "claim_cosine_near_orthogonal": bool(
+            max(out["iid"]["cos_mean"], out["noniid"]["cos_mean"]) < 0.2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    res = run(quick=not a.full, seed=a.seed)
+    print("saved:", C.save_result("fig3_gradip", res))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Benchmark orchestrator: ``python -m benchmarks.run [--full] [--only X]``.
+
+Runs one benchmark per paper table/figure (DESIGN.md §6), writes each
+result to runs/bench/<name>.json and prints a claims summary.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+from benchmarks import common as C
+
+SUITES = [
+    "microbench",        # kernel allclose + timings (fast, fails loud)
+    "comm_cost",         # §2.3: >=1000x communication saving
+    "error_floor",       # Thm 2.1: steady-state error grows with T
+    "fig3_gradip",       # Claim 2: GradIP phenomenon
+    "table1_noniid",     # Claim 1: MEERKAT > baselines, Non-IID
+    "table5_iid",        # Claim 1: MEERKAT > Full-FedZO, IID
+    "fig2_highfreq",     # Claim 1: T=1 closes the IID/Non-IID gap
+    "table7_sparsity",   # Table 7: robust across densities
+    "table6_vp",         # Claim 3: MEERKAT-VP > MEERKAT > random
+    "table12_transfer",  # Tables 12/13: mask transferability
+    "table11_decomfl",   # Table 11: MEERKAT vs DeComFL (dimension-free ZO)
+    "memory_footprint",  # §1 memory claim: ZO vs backprop activation memory
+    "ablation_server_momentum",  # beyond-paper: FedAvgM on sparse updates
+    "ablation_multi_dir",        # beyond-paper: K-direction ZO estimator
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grids (slow); default is quick mode")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of suites")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+
+    names = a.only.split(",") if a.only else SUITES
+    summary = []
+    for name in names:
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            res = mod.run(quick=not a.full, seed=a.seed)
+            res["wall_s"] = round(time.time() - t0, 1)
+            path = C.save_result(name, res)
+            claims = {k: v for k, v in res.items()
+                      if k.startswith("claim") or k == "all_ok"}
+            summary.append((name, "ok", claims, res["wall_s"]))
+            print(f"saved: {path}")
+        except Exception as e:  # noqa: BLE001 — keep the sweep going
+            traceback.print_exc()
+            summary.append((name, f"ERROR: {e}", {},
+                            round(time.time() - t0, 1)))
+
+    print("\n" + "=" * 72)
+    print("BENCHMARK SUMMARY")
+    print("=" * 72)
+    n_claims = n_pass = 0
+    for name, status, claims, wall in summary:
+        print(f"{name:18s} {status:6s} ({wall:7.1f}s)")
+        for k, v in claims.items():
+            n_claims += 1
+            n_pass += bool(v)
+            print(f"    {'PASS' if v else 'MISS'}  {k}")
+    print(f"\nclaims: {n_pass}/{n_claims} validated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 7: MEERKAT robustness across sparsity densities at T=1.
+
+Claim: performance is strong across orders of magnitude of density.
+
+Proportionality note: the paper sweeps 5e-1..5e-5 on 1.2-2.6B-param models,
+so even its sparsest setting keeps ~60k coords.  On the ~1e5-param tiny
+model the *relative* equivalent of that regime is ~5e-1..5e-3 (53k..534
+coords); 5e-4 (53 coords) is far beyond the paper's regime and is reported
+(in --full mode) as a beyond-paper extreme, excluded from the claim.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common as C
+
+# steadier steps for denser spaces (stability lr ~ 1/(n+2), see table1)
+LR_FOR_DENSITY = {5e-1: 5e-3, 5e-2: 2e-2, 5e-3: 1e-1, 5e-4: 2e-1}
+CLAIM_DENSITIES = {5e-1, 5e-2, 5e-3}
+
+
+def run(quick: bool = True, seed: int = 0, alpha: float = 0.5) -> dict:
+    rounds = 300 if quick else 800
+    densities = [5e-1, 5e-2, 5e-3] if quick else [5e-1, 5e-2, 5e-3, 5e-4]
+    prob = C.build_problem(seed=seed)
+    rows = []
+    for dens in densities:
+        for partition in ["iid", "dirichlet"]:
+            srv = C.make_server(prob, "meerkat", partition=partition,
+                                alpha=alpha, T=1, density=dens,
+                                lr=LR_FOR_DENSITY[dens], seed=seed)
+            (_, dt) = C.timed(srv.run, rounds)
+            m = C.final_metrics(srv, prob)
+            rows.append(dict(density=dens, partition=partition,
+                             n_coords=srv.space.n, acc=m["acc"],
+                             loss=m["loss"], wall_s=round(dt, 1)))
+            print(f"  u={dens:.0e} ({srv.space.n:6d} coords) {partition:10s} "
+                  f"acc={m['acc']:.3f} ({dt:.0f}s)")
+    in_claim = [r["acc"] for r in rows if r["density"] in CLAIM_DENSITIES]
+    best, worst = max(in_claim), min(in_claim)
+    return {"table": "table7_sparsity", "rows": rows,
+            "claim_robust_across_density": bool(worst > 0.7 * best
+                                                and worst > 0.5)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    res = run(quick=not a.full, seed=a.seed)
+    print("saved:", C.save_result("table7_sparsity", res))
+
+
+if __name__ == "__main__":
+    main()

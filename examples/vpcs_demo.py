@@ -1,0 +1,71 @@
+"""GradIP phenomenon + Virtual-Path Client Selection, visualized.
+
+    PYTHONPATH=src python examples/vpcs_demo.py
+
+The server reconstructs each client's gradient trajectory from uploaded
+scalars + shared seeds (the virtual path), computes GradIP against its
+pre-training gradient, and flags extreme Non-IID clients — printed here as
+ASCII sparklines so the decay-vs-oscillation signature is visible.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.configs.tiny import TINY
+from repro.core import (Client, analyze_trajectory, gradip_trajectory,
+                        make_local_run, pretrain_gradient_vec, round_keys,
+                        sensitivity_mask)
+from repro.data.corpus import pretrain_batches
+from repro.data.partition import (dirichlet_partition, single_label_partition,
+                                  subset)
+from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset
+from repro.models import Model
+
+BARS = " .:-=+*#%@"
+
+
+def spark(x, width=60):
+    x = np.asarray(x, np.float64)
+    x = np.abs(x)
+    bins = np.array_split(x, width)
+    m = np.array([b.mean() for b in bins])
+    m = m / (m.max() + 1e-12)
+    return "".join(BARS[int(v * (len(BARS) - 1))] for v in m)
+
+
+spec = TaskSpec()
+model = Model(TINY)
+params = model.init(jax.random.key(0))
+loss, _, _ = make_task_fns(model, spec)
+lm = lambda p, b: model.loss(p, b)
+
+pre = pretrain_batches(spec, n_batches=8, batch_size=32)
+space = sensitivity_mask(lm, params, pre, density=5e-2)
+gp = pretrain_gradient_vec(lm, params, space, pre)
+
+train = sample_dataset(spec, 2048, seed=1)
+parts = (dirichlet_partition(train["label"], 4, alpha=5.0, seed=0)
+         + single_label_partition(train["label"], 2, seed=1))
+clients = [Client(k, subset(train, p), 32) for k, p in enumerate(parts)]
+kinds = ["balanced"] * 4 + ["single-label"] * 2
+
+T = 200
+run = jax.jit(make_local_run(loss, space, eps=1e-3, lr=5e-2))
+keys = round_keys(0, 0, T)
+# thresholds are scale-relative: GradIP magnitudes on the tiny model are
+# ~1e-2 (the paper's sigma=1 suits 1-3B models)
+fl = FLConfig(vp_rho_later=3.0, vp_sigma=0.01, vp_init_steps=40,
+              vp_later_steps=40)
+
+print(f"GradIP over {T} local steps (server-side virtual path):\n")
+for c, kind in zip(clients, kinds):
+    b = {k: jnp.asarray(v) for k, v in c.next_batches(T).items()}
+    _, gs = run(params, keys, b, jnp.zeros((space.n,), jnp.float32))
+    ips, _, _ = gradip_trajectory(space, keys, gs, gp)
+    r = analyze_trajectory(np.asarray(ips), fl)
+    flag = "EARLY-STOP" if r.flagged else "          "
+    print(f"client {c.cid} [{kind:12s}] {flag} rho={r.rho_later:5.2f} "
+          f"|{spark(ips)}|")
+print("\nflagged clients are limited to T=1 local step per round "
+      "(Algorithm 1); their data is still consumed via the data pointer.")

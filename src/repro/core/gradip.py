@@ -1,0 +1,40 @@
+"""GradIP score (paper Definition 2.3) and trajectory computation.
+
+GradIP_t = < grad_f_pretrain , grad_hat_k^t >  where grad_hat_k^t is the
+ZO-reconstructed client gradient.  In sparse coordinates this is simply
+``g_k^t * dot(gp[mask], z_t)`` — the server never materializes dense
+gradients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gradip_trajectory(space, keys, gs, gp_vec):
+    """gs: [T] projected gradients; gp_vec: [n] pre-training gradient slice.
+
+    Returns (gradip [T], grad_norm [T], cosine [T])."""
+    gp = gp_vec.astype(jnp.float32)
+    gp_norm = jnp.linalg.norm(gp) + 1e-12
+
+    def one(key, g):
+        z = space.sample_z(key)
+        ip = g * jnp.dot(gp, z)
+        gnorm = jnp.abs(g) * jnp.linalg.norm(z)
+        cos = ip / (gp_norm * gnorm + 1e-12)
+        return ip, gnorm, cos
+
+    ips, norms, coss = jax.vmap(one)(keys, gs)
+    return ips, norms, coss
+
+
+def pretrain_gradient_vec(loss_fn, params, space, batches):
+    """Server-held pre-training gradient restricted to the space: [n]."""
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    acc = jnp.zeros((space.n,), jnp.float32)
+    n = 0
+    for b in batches:
+        acc = acc + space.slice(grad_fn(params, b))
+        n += 1
+    return acc / max(n, 1)

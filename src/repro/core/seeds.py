@@ -1,0 +1,20 @@
+"""Server seed ladder (paper Alg. 2: the server initializes a seed list
+``{s_r^1..s_r^T}`` per round; clients and server derive identical Gaussian
+perturbations from it — the basis of the virtual path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_keys(root_seed: int, rnd: int, T: int):
+    """The T per-step PRNG keys for round ``rnd`` (shared by all clients).
+
+    ``rnd`` may be negative (the VP calibration phase uses round -1); it is
+    mapped into uint32 range for fold_in."""
+    k = jax.random.fold_in(jax.random.key(root_seed), rnd & 0xFFFFFFFF)
+    return jax.random.split(k, T)
+
+
+def step_key(root_seed: int, rnd: int, t: int):
+    return round_keys(root_seed, rnd, t + 1)[t]

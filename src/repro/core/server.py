@@ -1,0 +1,185 @@
+"""Federated orchestration: MEERKAT (Alg. 2), high-frequency MEERKAT (Alg. 3),
+MEERKAT-VP (Alg. 1) and the baselines (Full-FedZO, weight-magnitude mask,
+random mask, LoRA-FedZO, random-early-stop).
+
+The server *never* sees client data: it receives only projected-gradient
+scalars and replays virtual paths from the shared seed ladder.  For
+simulation speed, clients with the same local-step count T are executed as a
+single vmapped jit call; the *aggregated update is always computed from the
+server-side virtual-path reconstruction* of the uploaded scalars (exactness
+vs the client-side trajectory is unit-tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import seeds as S
+from repro.core import virtual_path as VP
+from repro.core import vpcs as VPCS
+from repro.core import zo as ZO
+from repro.core.gradip import gradip_trajectory
+
+
+class Client:
+    """Holds a local dataset and a data pointer (paper §2.5: flagged clients
+    resume from where they stopped so all data is eventually used)."""
+
+    def __init__(self, cid: int, data: Dict[str, np.ndarray], batch_size: int):
+        self.cid = cid
+        self.data = data
+        self.batch_size = batch_size
+        self.ptr = 0
+        self.n = len(next(iter(data.values())))
+
+    def next_batches(self, T: int):
+        """Stack of T batches, advancing the pointer with wraparound."""
+        idx = (self.ptr + np.arange(T * self.batch_size)) % self.n
+        self.ptr = int((self.ptr + T * self.batch_size) % self.n)
+        sel = {k: v[idx] for k, v in self.data.items()}
+        return {k: v.reshape(T, self.batch_size, *v.shape[1:])
+                for k, v in sel.items()}
+
+
+@dataclass
+class CommLog:
+    up_bytes: int = 0
+    down_bytes: int = 0
+
+    def add(self, up: int, down: int):
+        self.up_bytes += int(up)
+        self.down_bytes += int(down)
+
+
+class FederatedZO:
+    """Generic sparse-ZO FL server; the ``space`` argument selects the method
+    (MEERKAT sensitivity mask / magnitude / random / dense / LoRA)."""
+
+    def __init__(self, loss_fn: Callable, params, space, fl: FLConfig,
+                 clients: Sequence[Client], eval_fn: Optional[Callable] = None,
+                 high_freq: Optional[bool] = None):
+        self.loss_fn = loss_fn
+        self.params = params
+        self.space = space
+        self.fl = fl
+        self.clients = list(clients)
+        self.eval_fn = eval_fn
+        self.high_freq = fl.local_steps == 1 if high_freq is None else high_freq
+        self.comm = CommLog()
+        self.round = 0
+        self.history: List[Dict[str, Any]] = []
+        self.early_stopped: set = set()
+        self.velocity = None  # FedAvgM server momentum state (beyond-paper)
+        self.gradip_log: Dict[int, list] = {c.cid: [] for c in self.clients}
+        self._batch_runs: Dict[int, Callable] = {}
+        self._recon = jax.jit(
+            lambda keys, gs: jax.vmap(
+                lambda g: VP.reconstruct_delta(self.space, keys, g,
+                                               self.fl.lr))(gs))
+
+    # -- jitted vmapped T-step client group (one compile per distinct T) ----
+    def _batch_run_for(self, T: int):
+        if T not in self._batch_runs:
+            run = ZO.make_local_run(self.loss_fn, self.space, self.fl.eps,
+                                    self.fl.lr)
+
+            def group(params, keys, batches):
+                zeros = jnp.zeros((self.space.n,), jnp.float32)
+                return jax.vmap(lambda b: run(params, keys, b, zeros))(batches)
+
+            self._batch_runs[T] = jax.jit(group)
+        return self._batch_runs[T]
+
+    def _client_T(self, cid: int) -> int:
+        return 1 if cid in self.early_stopped else self.fl.local_steps
+
+    @staticmethod
+    def _stack(batch_list):
+        return {k: jnp.asarray(np.stack([b[k] for b in batch_list]))
+                for k in batch_list[0]}
+
+    # -- one federated round (Alg. 2) ---------------------------------------
+    def run_round(self, gp_vec=None):
+        r = self.round
+        groups: Dict[int, List[Client]] = {}
+        for c in self.clients:
+            groups.setdefault(self._client_T(c.cid), []).append(c)
+        deltas, gs_by_cid = [], {}
+        for T, cs in groups.items():
+            keys = S.round_keys(self.fl.seed, r, T)
+            batches = self._stack([c.next_batches(T) for c in cs])
+            # (1) clients run T local ZO steps; upload the scalars g_k^{1..T}
+            _, gs = self._batch_run_for(T)(self.params, keys, batches)
+            # (2) server reconstructs each client's virtual path from
+            #     (seed list, scalars) — no data, no dense vectors.
+            deltas.append(self._recon(keys, gs))
+            for c, g in zip(cs, np.asarray(gs)):
+                gs_by_cid[c.cid] = g
+                self.comm.add(up=4 * T, down=self._down_bytes(T))
+                if gp_vec is not None:
+                    ips, _, _ = gradip_trajectory(self.space, keys,
+                                                  jnp.asarray(g), gp_vec)
+                    self.gradip_log[c.cid].append(np.asarray(ips))
+        # (3) aggregate reconstructed sparse updates (+ optional FedAvgM
+        # server momentum on the sparse value vector — beyond-paper)
+        agg = VP.aggregate(jnp.concatenate(deltas, axis=0))
+        if self.fl.server_momentum > 0.0:
+            self.velocity = (agg if self.velocity is None
+                             else self.fl.server_momentum * self.velocity
+                             + agg)
+            agg = self.velocity
+        self.params = self.space.add(self.params, agg)
+        self.round += 1
+        return gs_by_cid
+
+    def _down_bytes(self, T: int) -> int:
+        if self.high_freq:
+            return 4 * T + 8  # aggregated scalars + next seed
+        return 4 * self.space.n  # sparse (or dense/LoRA) model refresh
+
+    # -- calibration + VPCS (MEERKAT-VP, Alg. 1) ----------------------------
+    def calibrate_vp(self, gp_vec, T_cali: Optional[int] = None):
+        """Run the calibration phase, analyze GradIP trajectories, flag
+        extreme Non-IID clients for early stopping."""
+        T = T_cali or self.fl.vp_calibration_steps
+        keys = S.round_keys(self.fl.seed, -1, T)
+        batches = self._stack([c.next_batches(T) for c in self.clients])
+        _, gs = self._batch_run_for(T)(self.params, keys, batches)
+        trajs = []
+        for c, g in zip(self.clients, np.asarray(gs)):
+            ips, _, _ = gradip_trajectory(self.space, keys, jnp.asarray(g),
+                                          gp_vec)
+            trajs.append(np.asarray(ips))
+            c.ptr = 0  # calibration does not consume training order
+        results, flagged = VPCS.select_clients(trajs, self.fl)
+        self.early_stopped = set(flagged)
+        return results, flagged, trajs
+
+    def early_stop_random(self, n: int, seed: int = 0):
+        """Random-client-selection baseline: early-stop n random clients."""
+        rng = np.random.default_rng(seed)
+        ids = rng.choice([c.cid for c in self.clients], size=n, replace=False)
+        self.early_stopped = set(int(i) for i in ids)
+
+    # -- training loop -------------------------------------------------------
+    def run(self, rounds: int, eval_every: int = 0, eval_batch=None,
+            gp_vec=None, verbose: bool = False):
+        for _ in range(rounds):
+            self.run_round(gp_vec=gp_vec)
+            if eval_every and self.round % eval_every == 0 \
+                    and self.eval_fn is not None:
+                m = self.eval_fn(self.params, eval_batch)
+                m = {k: float(v) for k, v in m.items()}
+                m["round"] = self.round
+                self.history.append(m)
+                if verbose:
+                    print(f"  round {self.round}: " +
+                          " ".join(f"{k}={v:.4f}" for k, v in m.items()
+                                   if k != "round"))
+        return self.history

@@ -1,0 +1,49 @@
+"""Server-side virtual-path reconstruction (paper Alg. 2 step 2).
+
+Because the server holds the round's seed list and receives each client's
+projected gradients ``{g_k^t}``, it can regenerate every ``z_t`` and replay
+the client's local trajectory *exactly* — without any client data.  Since
+updates only touch the masked coordinates, the server tracks the sparse
+value vector (delta) instead of full weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reconstruct_delta(space, keys, gs, lr: float, delta0=None):
+    """Replay T local steps. gs: [T] (paper) or [T, K] (multi-direction ZO,
+    K scalars per step); keys: [T]. Returns delta_T [n]."""
+    if delta0 is None:
+        delta0 = jnp.zeros((space.n,), jnp.float32)
+    multi = gs.ndim == 2
+
+    def step(delta, inp):
+        key, g = inp
+        if multi:
+            dir_keys = jax.random.split(key, g.shape[0])
+            zs = jax.vmap(space.sample_z)(dir_keys)
+            upd = (g[:, None] * zs).mean(0)
+        else:
+            upd = g * space.sample_z(key)
+        return delta - lr * upd, None
+
+    delta_T, _ = jax.lax.scan(step, delta0, (keys, gs))
+    return delta_T
+
+
+def reconstruct_grad_vecs(space, keys, gs):
+    """The reconstructed ZO gradient vectors grad_hat_t = g_t * z_t.
+
+    Returned as [T, n] (sparse-coordinate representation)."""
+
+    def one(key, g):
+        return g * space.sample_z(key)
+
+    return jax.vmap(one)(keys, gs)
+
+
+def aggregate(deltas):
+    """FedAvg aggregation of reconstructed sparse client deltas: [K, n]."""
+    return jnp.mean(deltas, axis=0)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+Each kernel module contains the pl.pallas_call + BlockSpec implementation;
+``ops.py`` holds the jit'd public wrappers and ``ref.py`` the pure-jnp
+oracles used by the sweep tests.
+"""
+from repro.kernels import ops, ref

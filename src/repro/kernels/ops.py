@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container kernels always run in interpret mode; on a real TPU
+set ``interpret=False`` (the default flips on TPU platforms automatically).
+The flat-vector helpers pad/reshape 1-D inputs into the (R, 128) tile layout
+the kernels expect.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.gradip_reduce import LANE, gradip_reduce
+from repro.kernels.zo_update import BLOCK_R, dual_perturb, fused_update
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _tile(v, block_r: int):
+    """Pad a flat [N] vector to [R, 128] with R % block_r == 0."""
+    n = v.shape[0]
+    per = LANE * block_r
+    pad = (-n) % per
+    return jnp.pad(v, (0, pad)).reshape(-1, LANE), n
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def zo_dual_perturb_flat(w_flat, z_flat, m_flat, eps, *, block_r: int = BLOCK_R,
+                         interpret: bool | None = None):
+    """Flat-vector fused dual perturbation: returns (w+, w-) of shape [N]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n = w_flat.shape[0]
+    w2, _ = _tile(w_flat, block_r)
+    z2, _ = _tile(z_flat, block_r)
+    m2, _ = _tile(m_flat, block_r)
+    p, m_ = dual_perturb(w2, z2, m2, eps, block_r=block_r,
+                         interpret=interpret)
+    return p.reshape(-1)[:n], m_.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def zo_fused_update_flat(w_flat, z_flat, m_flat, scale, *,
+                         block_r: int = BLOCK_R,
+                         interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    n = w_flat.shape[0]
+    w2, _ = _tile(w_flat, block_r)
+    z2, _ = _tile(z_flat, block_r)
+    m2, _ = _tile(m_flat, block_r)
+    out = fused_update(w2, z2, m2, scale, block_r=block_r,
+                       interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def gradip_flat(gp_flat, z_flat, g, *, block_r: int = 256,
+                interpret: bool | None = None):
+    """GradIP = g * <gp, z> over flat sparse-coordinate vectors."""
+    interpret = _default_interpret() if interpret is None else interpret
+    gp2, _ = _tile(gp_flat, block_r)
+    z2, _ = _tile(z_flat, block_r)
+    return gradip_reduce(gp2, z2, g, block_r=block_r, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q, k, v, length, *, block_s: int = 512,
+                 interpret: bool | None = None):
+    """GQA flash-decode attention; see decode_attention.py for layout."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return decode_attention(q, k, v, length, block_s=block_s,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mamba_scan_op(dt, B_in, C_in, x, A, *, interpret: bool | None = None):
+    """Selective-scan kernel wrapper; picks kernel blocks fitting the shape.
+
+    dt, x: [B,S,E]; B_in, C_in: [B,S,N]; A: [E,N] -> (y, h_last)."""
+    from repro.kernels.mamba_scan import mamba_scan
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, E = dt.shape
+
+    def fit(n, target):
+        b = min(target, n)
+        while n % b:
+            b -= 1
+        return b
+
+    return mamba_scan(dt, B_in, C_in, x, A, e_block=fit(E, 128),
+                      s_block=fit(S, 256), interpret=interpret)

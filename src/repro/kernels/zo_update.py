@@ -1,0 +1,73 @@
+"""Fused sparse-ZO perturb / update Pallas TPU kernels.
+
+The MEERKAT inner loop touches the flat parameter vector three times per
+step when written naively (w+eps*z*m, w-eps*z*m, w-lr*g*z*m): three full HBM
+round-trips.  These kernels fuse each phase into a single pass with
+(8, 128)-tiled VMEM blocks:
+
+* ``dual_perturb``: one read of (w, z, m) -> both perturbed copies.
+* ``fused_update``: w' = w - lr * g * z * m  (g is a scalar operand).
+
+Inputs are 2-D ``[R, 128]`` tiles of the flat parameter vector (the ops.py
+wrapper pads/reshapes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUB = 8
+BLOCK_R = 256  # rows per block -> 256*128*4B = 128 KiB per f32 operand tile
+
+
+def _dual_perturb_kernel(w_ref, z_ref, m_ref, eps_ref, plus_ref, minus_ref):
+    w = w_ref[...]
+    pert = (eps_ref[0] * z_ref[...] * m_ref[...]).astype(w.dtype)
+    plus_ref[...] = w + pert
+    minus_ref[...] = w - pert
+
+
+def dual_perturb(w, z, m, eps, *, block_r: int = BLOCK_R,
+                 interpret: bool = True):
+    """w, z, m: [R, 128] -> (w + eps*z*m, w - eps*z*m)."""
+    R, C = w.shape
+    assert C == LANE and R % block_r == 0, (w.shape, block_r)
+    grid = (R // block_r,)
+    spec = pl.BlockSpec((block_r, LANE), lambda i: (i, 0))
+    eps_arr = jnp.full((1,), eps, jnp.float32)
+    return pl.pallas_call(
+        _dual_perturb_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec,
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(w.shape, w.dtype)] * 2,
+        interpret=interpret,
+    )(w, z, m, eps_arr)
+
+
+def _fused_update_kernel(w_ref, z_ref, m_ref, s_ref, out_ref):
+    out_ref[...] = w_ref[...] + (s_ref[0] * z_ref[...]
+                                 * m_ref[...]).astype(w_ref.dtype)
+
+
+def fused_update(w, z, m, scale, *, block_r: int = BLOCK_R,
+                 interpret: bool = True):
+    """w' = w + scale * z * m   (scale = -lr * g for the MEERKAT update)."""
+    R, C = w.shape
+    assert C == LANE and R % block_r == 0, (w.shape, block_r)
+    grid = (R // block_r,)
+    spec = pl.BlockSpec((block_r, LANE), lambda i: (i, 0))
+    s_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _fused_update_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(w, z, m, s_arr)

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+does not touch jax device state.  The dry-run forces 512 host devices via
+XLA_FLAGS *before* any jax import; real deployments get the same meshes from
+actual TPU topologies.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)}. "
+            "Set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (see launch/dryrun.py).")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                         devices=devices)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MeshConfig(data=16, model=16, pods=2 if multi_pod else 1)
+
+
+def make_mesh_from_config(mc: MeshConfig):
+    devices = jax.devices()[:mc.n_devices]
+    if len(devices) < mc.n_devices:
+        raise RuntimeError(f"need {mc.n_devices} devices, have {len(devices)}")
+    return jax.make_mesh(mc.shape, mc.axis_names,
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(mc.axis_names),
+                         devices=devices)

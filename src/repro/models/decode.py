@@ -1,0 +1,225 @@
+"""Serving-side model application: cache init, prefill, one-token decode.
+
+Cache layout (all leaves stacked over periods on axis 0):
+
+* attn / local_attn: ``{'k','v': [n, B, W, KV, hd]}`` (W = window for local)
+* mamba:             ``{'conv': [n,B,K-1,E], 'state': [n,B,E,N]}``
+* mlstm:             ``{'C': [n,B,H,dh,dh], 'n': [n,B,H,dh], 'm': [n,B,H]}``
+* slstm:             ``{'c','n','h','m': [n,B,E]}``
+* cross-attn (audio): ``{'ck','cv': [n,B,Senc,KV,hd]}``
+
+``cache['pos']`` is the number of tokens already absorbed.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.ssm import _dt_rank
+from repro.models.transformer import (DEFAULT_CTX, ShardCtx, _ffn_fwd,
+                                      _maybe_posenc, _sinusoid, embed_input,
+                                      encoder_forward, forward, unembed)
+
+P = jax.sharding.PartitionSpec
+
+
+# --------------------------------------------------------------- init ------
+def _mixer_cache(cfg: ModelConfig, mixer: str, n: int, B: int, S_max: int,
+                 dtype):
+    hd = cfg.resolved_head_dim
+    if mixer in ("attn", "local_attn"):
+        W = S_max
+        if mixer == "local_attn" and cfg.sliding_window:
+            W = min(S_max, cfg.sliding_window)
+        c = {"k": jnp.zeros((n, B, W, cfg.n_kv_heads, hd), dtype),
+             "v": jnp.zeros((n, B, W, cfg.n_kv_heads, hd), dtype)}
+        if cfg.encoder is not None:
+            Se = cfg.encoder.n_frames
+            c["ck"] = jnp.zeros((n, B, Se, cfg.n_kv_heads, hd), dtype)
+            c["cv"] = jnp.zeros((n, B, Se, cfg.n_kv_heads, hd), dtype)
+        return c
+    if mixer == "mamba":
+        E = cfg.ssm.expand * cfg.d_model
+        return {"conv": jnp.zeros((n, B, cfg.ssm.d_conv - 1, E), dtype),
+                "state": jnp.zeros((n, B, E, cfg.ssm.d_state), jnp.float32)}
+    if mixer == "mlstm":
+        E = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+        H = cfg.xlstm.n_heads
+        dh = E // H
+        return {"C": jnp.zeros((n, B, H, dh, dh), jnp.float32),
+                "n": jnp.zeros((n, B, H, dh), jnp.float32),
+                "m": jnp.full((n, B, H), -1e30, jnp.float32)}
+    if mixer == "slstm":
+        E = cfg.d_model
+        return {k: jnp.zeros((n, B, E), jnp.float32) for k in "cnhm"}
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16):
+    n = cfg.n_periods
+    stack = {f"p{i}": _mixer_cache(cfg, mixer, n, B, S_max, dtype)
+             for i, (mixer, _) in enumerate(cfg.layer_pattern)}
+    return {"stack": stack, "pos": jnp.zeros((), jnp.int32)}
+
+
+def abstract_cache(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, B, S_max, dtype))
+
+
+# -------------------------------------------------------------- decode -----
+def _mixer_decode(x1, lp, cc, mixer, cfg, ctx, cur_pos):
+    h = L.apply_norm(x1, lp["norm"], cfg.norm, cfg.norm_eps)
+    new_cc = dict(cc)
+    if mixer in ("attn", "local_attn"):
+        y, nk, nv = L.decode_self_attention(
+            h, lp, cfg, cc["k"], cc["v"], cur_pos,
+            local=(mixer == "local_attn"), ctx=ctx)
+        new_cc["k"], new_cc["v"] = nk, nv
+    elif mixer == "mamba":
+        y, buf, st = SSM.mamba_decode(h, lp, cfg.ssm, cc["conv"], cc["state"])
+        new_cc["conv"], new_cc["state"] = buf, st
+    elif mixer == "mlstm":
+        y, C, nn, m = XL.mlstm_decode(h, lp, cfg.xlstm, cc["C"], cc["n"],
+                                      cc["m"])
+        new_cc["C"], new_cc["n"], new_cc["m"] = C, nn, m
+    elif mixer == "slstm":
+        y, c, nn, hh, m = XL.slstm_decode(h, lp, cfg.xlstm, cc["c"], cc["n"],
+                                          cc["h"], cc["m"])
+        new_cc["c"], new_cc["n"], new_cc["h"], new_cc["m"] = c, nn, hh, m
+    else:
+        raise ValueError(mixer)
+    if cfg.post_norms and "post_norm" in lp:
+        y = L.apply_norm(y, lp["post_norm"], cfg.norm, cfg.norm_eps)
+    x1 = x1 + y
+    if "cross" in lp and "ck" in cc:
+        h = L.apply_norm(x1, lp["cross"]["norm"], cfg.norm, cfg.norm_eps)
+        x1 = x1 + L.cross_attention(h, (cc["ck"], cc["cv"]), lp["cross"],
+                                    cfg, ctx)
+    return x1, new_cc
+
+
+def decode_step(params, token, cache, cfg: ModelConfig,
+                ctx: ShardCtx = DEFAULT_CTX):
+    """token: [B] int32 -> (logits [B,V], new cache)."""
+    B = token.shape[0]
+    x = params["embed"][token][:, None, :]  # [B,1,D]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    cur = cache["pos"]
+    x = _maybe_posenc(x, cfg, offset=cur)
+
+    def body(xx, inp):
+        pp, cc = inp
+        new_cc = {}
+        for i, (mixer, ffn) in enumerate(cfg.layer_pattern):
+            xx, new_cc[f"p{i}"] = _mixer_decode(xx, pp[f"p{i}"], cc[f"p{i}"],
+                                                mixer, cfg, ctx, cur)
+            xx, _ = _ffn_fwd(xx, pp[f"p{i}"], ffn, cfg, ctx)
+        return xx, new_cc
+
+    x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"]),
+                                unroll=ctx.scan_unroll)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = unembed(x, params, cfg)[:, 0]
+    return logits, {"stack": new_stack, "pos": cur + 1}
+
+
+# ------------------------------------------------------------- prefill -----
+def _fill_attn_cache(k, v, W: int):
+    """k,v: [B,S,KV,hd] -> rolling buffer of size W aligned to slot = pos %W."""
+    B, S, KV, hd = k.shape
+    if S <= W:
+        pad = W - S
+        kb = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vb = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return kb, vb
+    start = S - W
+    j = jnp.arange(W)
+    p = start + jnp.mod(j - start, W)
+    return k[:, p], v[:, p]
+
+
+def _mixer_prefill(x, lp, mixer, cfg, ctx, positions, enc_out, S_max):
+    """Returns (x_out, cache_entry) mirroring _mixer_fwd + state capture."""
+    h = L.apply_norm(x, lp["norm"], cfg.norm, cfg.norm_eps)
+    cc = {}
+    if mixer in ("attn", "local_attn"):
+        B, S, _ = h.shape
+        q, k, v = L._project_qkv(h, lp, cfg)
+        if cfg.rope_style != "none":
+            partial = (cfg.rope_partial_factor
+                       if cfg.rope_style == "partial" else 1.0)
+            q = L.apply_rope(q, positions, cfg.rope_theta, partial)
+            k = L.apply_rope(k, positions, cfg.rope_theta, partial)
+        local = mixer == "local_attn"
+        window = cfg.sliding_window if local else 0
+        y = L.blocked_gqa_attention(q, k, v, cfg, ctx, window=window,
+                                    q_block=ctx.attn_q_block,
+                                    unroll=ctx.unroll_chunks)
+        y = jnp.einsum("bsx,xe->bse", y.reshape(B, S, -1), lp["wo"])
+        W = S_max
+        if local and cfg.sliding_window:
+            W = min(S_max, cfg.sliding_window)
+        cc["k"], cc["v"] = _fill_attn_cache(k, v, W)
+    elif mixer == "mamba":
+        y, (buf, st) = SSM.mamba_forward(h, lp, cfg.ssm, chunk=ctx.mamba_chunk,
+                                         return_state=True)
+        cc["conv"], cc["state"] = buf, st
+    elif mixer == "mlstm":
+        y, (C, n, m) = XL.mlstm_forward(h, lp, cfg.xlstm, block=ctx.mlstm_block,
+                                        return_state=True)
+        cc["C"], cc["n"], cc["m"] = C, n, m
+    elif mixer == "slstm":
+        y, (c, n, hh, m) = XL.slstm_forward(h, lp, cfg.xlstm, return_state=True)
+        cc["c"], cc["n"], cc["h"], cc["m"] = c, n, hh, m
+    else:
+        raise ValueError(mixer)
+    if cfg.post_norms and "post_norm" in lp:
+        y = L.apply_norm(y, lp["post_norm"], cfg.norm, cfg.norm_eps)
+    x = x + y
+    if enc_out is not None and "cross" in lp:
+        kv = L.encode_kv(enc_out, lp["cross"], cfg)
+        cc["ck"], cc["cv"] = kv
+        hh = L.apply_norm(x, lp["cross"]["norm"], cfg.norm, cfg.norm_eps)
+        x = x + L.cross_attention(hh, kv, lp["cross"], cfg, ctx)
+    return x, cc
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: ShardCtx = DEFAULT_CTX,
+            S_max: int = 0):
+    """Process the prompt; returns (last-token logits [B,V], cache)."""
+    x = embed_input(params, batch, cfg)
+    x = _maybe_posenc(x, cfg)
+    S_total = x.shape[1]
+    S_max = S_max or S_total
+    spec = ctx.act_spec(x.shape[0])
+    if spec is not None:
+        x = ctx.constrain(x, spec)
+    positions = jnp.broadcast_to(jnp.arange(S_total), x.shape[:2])
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encoder_forward(params, batch["audio_embeds"].astype(x.dtype),
+                                  cfg, ctx)
+
+    def body(xx, pp):
+        new_cc = {}
+        for i, (mixer, ffn) in enumerate(cfg.layer_pattern):
+            xx, new_cc[f"p{i}"] = _mixer_prefill(xx, pp[f"p{i}"], mixer, cfg,
+                                                 ctx, positions, enc_out, S_max)
+            xx, _ = _ffn_fwd(xx, pp[f"p{i}"], ffn, cfg, ctx)
+        if spec is not None:
+            xx = ctx.constrain(xx, spec)
+        return xx, new_cc
+
+    x, stack_cache = jax.lax.scan(body, x, params["stack"],
+                                  unroll=ctx.scan_unroll)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = unembed(x[:, -1:], params, cfg)[:, 0]
+    return logits, {"stack": stack_cache,
+                    "pos": jnp.asarray(S_total, jnp.int32)}

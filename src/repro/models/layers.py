@@ -1,0 +1,370 @@
+"""Composable transformer layers: norms, RoPE variants, GQA attention with
+softcaps / sliding windows / qk-norm / biases, gated & plain MLPs.
+
+All functions are pure; parameters are plain dict pytrees created in
+``repro.models.init``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9  # large-negative for masking (bf16-safe)
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def apply_norm(x, p, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float, partial: float = 1.0):
+    """x: [..., S, n_heads, head_dim]; positions: [..., S] int32.
+
+    partial < 1 rotates only the first ``partial * head_dim`` dims
+    (chatglm-style "2d" rope).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * partial)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    freqs = rope_freqs(rot, theta)  # [rot/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, rot/2]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ------------------------------------------------------------ attention ----
+def _project_qkv(x, p, cfg):
+    """Return q [B,S,H,hd], k,v [B,S,KV,hd]."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if "lora_qa" in p:
+        s = cfg.lora_alpha / cfg.lora_rank
+        q = q + s * jnp.einsum("bsr,rh->bsh",
+                               jnp.einsum("bsd,dr->bsr", x, p["lora_qa"]),
+                               p["lora_qb"])
+        v = v + s * jnp.einsum("bsr,rh->bsh",
+                               jnp.einsum("bsd,dr->bsr", x, p["lora_va"]),
+                               p["lora_vb"])
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(cfg.n_heads, hd)
+        k = k + p["bk"].reshape(cfg.n_kv_heads, hd)
+        v = v + p["bv"].reshape(cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_attention(q, k, v, mask, cfg, ctx=None):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd]; mask: [B|1, Sq, Sk] bool or None.
+
+    KV heads are repeated to the full head count and scores use the
+    [B, H, Sq, Sk] layout so tensor-parallel sharding over H survives the
+    GQA grouping (see sharding/rules.py)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scale = hd ** -0.5
+    if ctx is not None:
+        spec = ctx.attn_head_spec(B, Sq, H)
+        if spec is not None:
+            q = ctx.constrain(q, spec)
+            k = ctx.constrain(k, spec)
+            v = ctx.constrain(v, spec)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def causal_mask(Sq: int, Sk: int, window: int = 0, offset: int = 0):
+    """[1, Sq, Sk] causal (optionally banded) mask.
+
+    ``offset`` is the absolute position of query 0 minus key 0 (for caches).
+    """
+    qi = jnp.arange(Sq)[:, None] + offset
+    ki = jnp.arange(Sk)[None, :]
+    m = ki <= qi
+    if window:
+        m &= ki > qi - window
+    return m[None]
+
+
+def self_attention(x, p, cfg, positions, *, local: bool, mask_extra=None,
+                   ctx=None):
+    """Full training/prefill self-attention. x: [B,S,D] -> [B,S,D]."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg)
+    if cfg.rope_style != "none":
+        partial = cfg.rope_partial_factor if cfg.rope_style == "partial" else 1.0
+        q = apply_rope(q, positions, cfg.rope_theta, partial)
+        k = apply_rope(k, positions, cfg.rope_theta, partial)
+    window = cfg.sliding_window if local else 0
+    mask = causal_mask(S, S, window)
+    if mask_extra is not None:
+        mask = mask & mask_extra
+    out = gqa_attention(q, k, v, mask, cfg, ctx)
+    return jnp.einsum("bsx,xe->bse", out.reshape(B, S, -1), p["wo"])
+
+
+def blocked_gqa_attention(q, k, v, cfg, ctx, *, window: int, q_block: int,
+                          unroll: bool = False):
+    """Query-block-chunked causal attention: scores are materialized per
+    block [B,H,q_block,Sk] instead of [B,H,S,S].  Falls back to one full
+    block when q_block does not apply."""
+    B, S, H, hd = q.shape
+    if not q_block or S % q_block or S <= q_block:
+        return gqa_attention(q, k, v, causal_mask(S, S, window), cfg, ctx)
+    nb = S // q_block
+    qb = q.reshape(B, nb, q_block, H, hd).swapaxes(0, 1)
+
+    def blk(qi, off):
+        mask = causal_mask(q_block, S, window, offset=off)
+        return gqa_attention(qi, k, v, mask, cfg, ctx)
+
+    if unroll:
+        outs = [blk(qb[i], i * q_block) for i in range(nb)]
+        return jnp.concatenate(outs, axis=1)
+    outs = jax.lax.map(lambda t: blk(t[0], t[1]),
+                       (qb, jnp.arange(nb) * q_block))
+    return outs.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+def online_gqa_attention(q, k, v, cfg, *, window: int = 0,
+                         q_block: int = 512, kv_block: int = 512,
+                         unroll: bool = False):
+    """Flash-style causal attention: online-softmax over KV blocks, grouped
+    query (no KV repeat).  Never materializes [S, S] scores — the working
+    set per (q_block, kv_block) tile is O(q_block * kv_block), so the HBM
+    traffic drops from O(H*S^2) to O(S*d) (§Perf pair 2, iteration 2).
+
+    q: [B,S,H,hd]; k,v: [B,S,KV,hd] -> [B,S,H,hd].  Semantically identical
+    to gqa_attention with a causal (optionally banded) mask.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    if S % q_block or S % kv_block:
+        return gqa_attention(q, k, v, causal_mask(S, S, window), cfg, None)
+    nq, nk = S // q_block, S // kv_block
+    qg = q.reshape(B, nq, q_block, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
+    ki_base = jnp.arange(kv_block)[None, :]
+    qi_base = jnp.arange(q_block)[:, None]
+
+    def q_chunk(args):
+        qb, q0 = args  # [B,q_block,KV,G,hd], scalar offset
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, k0 = inp
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cfg.attn_softcap)
+            valid = (k0 + ki_base) <= (q0 + qi_base)
+            if window:
+                valid &= (k0 + ki_base) > (q0 + qi_base - window)
+            s = jnp.where(valid[None, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
+        offs = jnp.arange(nk) * kv_block
+        if unroll:
+            carry = (m0, l0, a0)
+            for i in range(nk):
+                carry, _ = kv_step(carry, (ks[i], vs[i], offs[i]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          (ks, vs, offs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,KV,G,q_block,hd]
+        return out
+
+    if unroll:
+        outs = jnp.stack([q_chunk((qg[i], jnp.asarray(i * q_block)))
+                          for i in range(nq)])
+    else:
+        outs = jax.lax.map(q_chunk, (qg, jnp.arange(nq) * q_block))
+    # [nq,B,KV,G,q_block,hd] -> [B, nq*q_block, KV*G, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, hd)
+    return out.astype(v.dtype)
+
+
+def self_attention_chunked(x, p, cfg, positions, *, local: bool, q_block: int,
+                           unroll: bool = False, ctx=None):
+    """Query-block-chunked causal self-attention (see blocked_gqa_attention);
+    semantically identical to :func:`self_attention`."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg)
+    if cfg.rope_style != "none":
+        partial = cfg.rope_partial_factor if cfg.rope_style == "partial" else 1.0
+        q = apply_rope(q, positions, cfg.rope_theta, partial)
+        k = apply_rope(k, positions, cfg.rope_theta, partial)
+    window = cfg.sliding_window if local else 0
+    if ctx is not None and getattr(ctx, "online_attn", False):
+        out = online_gqa_attention(
+            q, k, v, cfg, window=window,
+            q_block=q_block or min(512, q.shape[1]),
+            kv_block=min(getattr(ctx, "kv_block", 512), q.shape[1]),
+            unroll=unroll)
+    else:
+        out = blocked_gqa_attention(q, k, v, cfg, ctx, window=window,
+                                    q_block=q_block, unroll=unroll)
+    return jnp.einsum("bsx,xe->bse", out.reshape(B, S, -1), p["wo"])
+
+
+def bidir_attention(x, p, cfg, ctx=None):
+    """Encoder (non-causal) self-attention."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg)
+    out = gqa_attention(q, k, v, None, cfg, ctx)
+    return jnp.einsum("bsx,xe->bse", out.reshape(B, S, -1), p["wo"])
+
+
+def cross_attention(x, enc_kv, p, cfg, ctx=None):
+    """Decoder cross-attention. enc_kv: (k,v) each [B,Senc,KV,hd]."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k, v = enc_kv
+    out = gqa_attention(q, k, v, None, cfg, ctx)
+    return jnp.einsum("bsx,xe->bse", out.reshape(B, S, -1), p["wo"])
+
+
+def encode_kv(enc_out, p, cfg):
+    """Precompute cross-attention K/V from encoder output."""
+    B, Se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(B, Se, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(B, Se, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# -------------------------------------------------- decode-mode attention ----
+def grouped_gqa_attention(q, k, v, valid, cfg, ctx=None):
+    """Decode attention with the query grouped per KV head — no KV repeat.
+
+    q: [B,Sq,H,hd]; k,v: [B,W,KV,hd]; valid: [B|1,Sq,W] bool.
+
+    ``gqa_attention`` repeats K/V to H heads before the matmul, which for a
+    32k decode cache materializes (and, tensor-parallel, all-gathers) a
+    G-times-redundant [B,W,KV,G,hd] tensor (§Perf iteration 1).  Grouping
+    the *query* instead keeps cache-sized tensors at their stored shape;
+    with the cache sequence-sharded over 'model', scores come out
+    W-sharded, the softmax lowers to cheap stat all-reduces, and the output
+    contraction partial-sums into one [B,KV,G,hd]-sized all-reduce."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = hd ** -0.5
+    # bf16 operands + f32 accumulation via preferred_element_type: avoids
+    # materializing cache-sized f32 converts (§Perf iteration 2) and is the
+    # TPU-native MXU mode.
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    if valid is not None:
+        scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(v.dtype)
+
+
+def decode_self_attention(x1, p, cfg, cache_k, cache_v, cur_pos, *,
+                          local: bool, ctx=None):
+    """One-token decode. x1: [B,1,D]; cache_k/v: [B,W,KV,hd] (rolling when
+    local). Returns (out [B,1,D], new_k, new_v)."""
+    B = x1.shape[0]
+    hd = cfg.resolved_head_dim
+    W = cache_k.shape[1]
+    q, k, v = _project_qkv(x1, p, cfg)  # [B,1,H,hd], [B,1,KV,hd]
+    if cfg.rope_style != "none":
+        partial = cfg.rope_partial_factor if cfg.rope_style == "partial" else 1.0
+        pos = jnp.full((B, 1), cur_pos, jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta, partial)
+        k = apply_rope(k, pos, cfg.rope_theta, partial)
+    slot = jnp.mod(cur_pos, W) if (local and cfg.sliding_window) else cur_pos
+    # cast to the cache dtype BEFORE the update: rope upcasts k to f32, and
+    # dynamic_update_slice would promote the *entire cache* to f32 per layer
+    # (a full-cache convert round-trip; §Perf iteration 3)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    ki = jnp.arange(W)[None, None, :]  # [1,1,W]
+    if local and cfg.sliding_window:
+        valid = (ki <= slot) | (cur_pos >= W)  # rolling buffer: all valid once full
+    else:
+        valid = ki <= cur_pos
+    out = grouped_gqa_attention(q, cache_k, cache_v, valid, cfg, ctx)
+    out = jnp.einsum("bsx,xe->bse", out.reshape(B, 1, -1), p["wo"])
+    return out, cache_k, cache_v
+
+
+# ------------------------------------------------------------------ MLP ----
+def mlp(x, p, cfg):
+    if cfg.act == "gelu_plain":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    else:
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])

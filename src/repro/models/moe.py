@@ -1,0 +1,187 @@
+"""Mixture-of-Experts FFN.
+
+Two implementations:
+
+* :func:`moe_dense_ref` — capacity-based one-hot dispatch (Switch-style) as a
+  pure-jnp oracle; used for tiny models, decode-time token counts, and as the
+  reference in tests.
+* :func:`moe_sharded` — TPU-native expert-parallel path inside a
+  ``jax.shard_map`` region: experts are sharded over the 'model' mesh axis,
+  tokens are sharded over the batch axes and replicated over 'model'.  Each
+  shard selects the (token, slot) assignments that route to its local experts
+  with a fixed per-expert capacity (one-hot cumsum position assignment),
+  gathers the activations, runs grouped matmuls ``ecd,edf->ecf`` (MXU
+  friendly), scatter-adds the gate-weighted results and psums over 'model'.
+
+Both return ``(y, aux_loss)`` where aux is the standard load-balance loss.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+def _router(x2d, router_w):
+    """x2d: [T, D] -> probs [T, E] (f32)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _aux_loss(probs, topk_idx, n_experts: int):
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    T = probs.shape[0]
+    onehot = jax.nn.one_hot(topk_idx, n_experts, dtype=jnp.float32)  # [T,k,E]
+    f = onehot.sum(axis=(0, 1)) / (T * topk_idx.shape[1])
+    P = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * P)
+
+
+def _expert_ffn(xg, w1, w2, w3, act):
+    """xg: [E, C, D]; w1/w3: [E, D, F]; w2: [E, F, D]."""
+    h = jnp.einsum("ecd,edf->ecf", xg, w1)
+    h = (jax.nn.silu if act == "silu" else jax.nn.gelu)(h)
+    if w3 is not None:
+        h = h * jnp.einsum("ecd,edf->ecf", xg, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _shared_expert(x2d, p, act):
+    h = jnp.einsum("td,df->tf", x2d, p["sw1"])
+    h = (jax.nn.silu if act == "silu" else jax.nn.gelu)(h)
+    if "sw3" in p:
+        h = h * jnp.einsum("td,df->tf", x2d, p["sw3"])
+    return jnp.einsum("tf,fd->td", h, p["sw2"])
+
+
+def moe_dense_ref(x, p, mcfg: MoEConfig, act: str = "silu"):
+    """x: [B, S, D] -> (y, aux).  One-hot capacity dispatch (oracle)."""
+    B, S, D = x.shape
+    E, k = mcfg.n_experts, mcfg.top_k
+    x2d = x.reshape(B * S, D)
+    T = B * S
+    C = max(1, math.ceil(T * k / E * mcfg.capacity_factor))
+    probs = _router(x2d, p["router"])
+    gate, idx = jax.lax.top_k(probs, k)  # [T,k]
+    gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)
+    aux = _aux_loss(probs, idx, E)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # [T,k,E]
+    flat_oh = onehot.reshape(T * k, E)  # (token, slot) pairs, token-major
+    pos = jnp.cumsum(flat_oh, axis=0) - flat_oh  # exclusive position in expert
+    pos = jnp.sum(pos * flat_oh, axis=-1).reshape(T, k)
+    keep = pos < C
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+    # dispatch [T, E, C]
+    disp = jnp.einsum("tke,tkc->tec", onehot, pos_oh)
+    xg = jnp.einsum("tec,td->ecd", disp, x2d.astype(jnp.float32)).astype(x.dtype)
+    yg = _expert_ffn(xg, p["w1"], p["w2"], p.get("w3"), act)
+    comb = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh, gate)
+    y = jnp.einsum("tec,ecd->td", comb, yg.astype(jnp.float32)).astype(x.dtype)
+    if "sw1" in p:
+        y = y + _shared_expert(x2d, p, act)
+    return y.reshape(B, S, D), aux
+
+
+# ------------------------------------------------------------- sharded -----
+def _moe_local(x, router_w, w1, w2, w3, shared, *, mcfg: MoEConfig, act: str,
+               model_axis: str, batch_axes=()):
+    """Body run per shard inside shard_map.
+
+    x: [B_loc, S, D] (replicated over model axis);
+    w1: [E_loc, D, F] (expert-sharded).
+    """
+    B, S, D = x.shape
+    E, k = mcfg.n_experts, mcfg.top_k
+    E_loc = w1.shape[0]
+    m_idx = jax.lax.axis_index(model_axis)
+    first = m_idx * E_loc
+
+    x2d = x.reshape(B * S, D)
+    T = B * S
+    C = max(1, math.ceil(T * k / E * mcfg.capacity_factor))
+    probs = _router(x2d, router_w)
+    gate, idx = jax.lax.top_k(probs, k)  # [T, k]
+    gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)
+    aux = _aux_loss(probs, idx, E)
+    if batch_axes:
+        aux = jax.lax.pmean(aux, batch_axes)
+
+    local = idx - first  # [T,k]; valid if in [0, E_loc)
+    valid = (local >= 0) & (local < E_loc)
+    local_c = jnp.where(valid, local, 0)
+    onehot = jax.nn.one_hot(local_c, E_loc, dtype=jnp.float32) * valid[..., None]
+    flat_oh = onehot.reshape(T * k, E_loc)
+    pos = jnp.cumsum(flat_oh, axis=0) - flat_oh  # [T*k, E_loc]
+    pos = jnp.sum(pos * flat_oh, axis=-1).reshape(T, k)
+    keep = valid & (pos < C)
+    # token index routed to (local expert e, capacity slot c)
+    tok_ids = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k))
+    e_flat = jnp.where(keep, local_c, E_loc).reshape(-1)        # overflow -> E_loc
+    c_flat = jnp.where(keep, pos, 0).astype(jnp.int32).reshape(-1)
+    slot_tok = jnp.full((E_loc + 1, C), T, jnp.int32)           # T = dummy row
+    slot_tok = slot_tok.at[e_flat, c_flat].set(tok_ids.reshape(-1), mode="drop")
+    slot_tok = slot_tok[:E_loc]                                  # [E_loc, C]
+    slot_gate = jnp.zeros((E_loc + 1, C), jnp.float32)
+    slot_gate = slot_gate.at[e_flat, c_flat].set(gate.reshape(-1), mode="drop")
+    slot_gate = slot_gate[:E_loc]
+
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, D), x2d.dtype)], axis=0)
+    xg = x_pad[slot_tok]  # [E_loc, C, D]
+    yg = _expert_ffn(xg, w1, w2, w3, act)  # [E_loc, C, D]
+    yg = yg.astype(jnp.float32) * slot_gate[..., None]
+    y = jnp.zeros((T + 1, D), jnp.float32)
+    y = y.at[slot_tok.reshape(-1)].add(yg.reshape(-1, D), mode="drop")[:T]
+    y = jax.lax.psum(y, model_axis)
+    if shared is not None:
+        # shared expert is sharded on its hidden dim across the model axis
+        sw1, sw2, sw3 = shared
+        h = jnp.einsum("td,df->tf", x2d, sw1)
+        h = (jax.nn.silu if act == "silu" else jax.nn.gelu)(h)
+        if sw3 is not None:
+            h = h * jnp.einsum("td,df->tf", x2d, sw3)
+        ys = jnp.einsum("tf,fd->td", h, sw2)
+        y = y + jax.lax.psum(ys.astype(jnp.float32), model_axis)
+    return y.astype(x.dtype).reshape(B, S, D), aux
+
+
+def moe_sharded(x, p, mcfg: MoEConfig, act: str, mesh, batch_axes, model_axis):
+    """Expert-parallel MoE via shard_map. x: [B,S,D]. Requires gated (w3)."""
+    P = jax.sharding.PartitionSpec
+    xspec = P(batch_axes, None, None)
+    has_shared = "sw1" in p
+
+    def body(xx, rw, w1, w2, w3, *shared_ws):
+        shared = None
+        if has_shared:
+            shared = (shared_ws[0], shared_ws[1],
+                      shared_ws[2] if len(shared_ws) > 2 else None)
+        return _moe_local(xx, rw, w1, w2, w3, shared, mcfg=mcfg, act=act,
+                          model_axis=model_axis, batch_axes=batch_axes)
+
+    in_specs = [xspec, P(None, None), P(model_axis, None, None),
+                P(model_axis, None, None), P(model_axis, None, None)]
+    args = [x, p["router"], p["w1"], p["w2"], p["w3"]]
+    if has_shared:
+        in_specs += [P(None, model_axis), P(model_axis, None)]
+        args += [p["sw1"], p["sw2"]]
+        if "sw3" in p:
+            in_specs.append(P(None, model_axis))
+            args.append(p["sw3"])
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                       out_specs=(xspec, P()), check_vma=False)
+    return fn(*args)
+
+
+def moe_ffn(x, p, mcfg: MoEConfig, act: str, ctx):
+    """Dispatch between the sharded and dense implementations."""
+    if ctx is not None and ctx.use_sharded_moe and x.shape[0] >= ctx.dp_size:
+        return moe_sharded(x, p, mcfg, act, ctx.mesh, ctx.batch_axes,
+                           ctx.model_axis)
+    return moe_dense_ref(x, p, mcfg, act)

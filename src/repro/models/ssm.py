@@ -1,0 +1,164 @@
+"""Mamba-style selective SSM block (jamba mixer).
+
+TPU adaptation: the recurrence h_t = a_t * h_{t-1} + b_t is evaluated with
+``jax.lax.associative_scan`` inside fixed-size chunks (memory O(B*Lc*E*N))
+with a sequential ``lax.scan`` carrying the state across chunks — the
+classical chunked-parallel selective-scan layout (no CUDA kernel needed).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+
+
+def _dt_rank(cfg_d_model: int, scfg: SSMConfig) -> int:
+    return scfg.dt_rank or math.ceil(cfg_d_model / 16)
+
+
+def _causal_conv(x, w, b, buf=None):
+    """Depthwise causal conv. x: [B,S,E]; w: [K,E]; buf: [B,K-1,E] history."""
+    K = w.shape[0]
+    if buf is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = buf.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, E]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y + b
+
+
+def _ssm_inner(dt, B_in, C_in, x, A):
+    """Materialized selective scan for one chunk.
+
+    dt, x: [B,L,E]; B_in, C_in: [B,L,N]; A: [E,N].
+    Returns (h_last [B,E,N], y [B,L,E], A_cumprod_last [B,E,N]).
+    """
+    a = jnp.exp(dt[..., None] * A)                       # [B,L,E,N]
+    b = (dt * x)[..., None] * B_in[:, :, None, :]        # [B,L,E,N]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    aprod, bcum = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return aprod, bcum
+
+
+def mamba_forward(x, p, scfg: SSMConfig, *, chunk: int = 64,
+                  return_state: bool = False, unroll: bool = False,
+                  mode: str = "scan"):
+    """x: [B,S,D] -> [B,S,D] (training / prefill).
+
+    mode:
+      * "scan"   — chunked associative scan (pure XLA; simulation default).
+      * "kernel" — the Pallas selective-scan kernel (kernels/mamba_scan.py):
+        VMEM-resident state, O(S*E) HBM traffic; the TPU target (interpret
+        mode on CPU).  Requires S and E divisible by the kernel blocks.
+      * "stub"   — dry-run traffic stand-in for the kernel: one elementwise
+        pass with exactly the kernel's HBM I/O footprint (read dt/B/C/x,
+        write y).  NOT the scan numerically — used only by launch/dryrun.py
+        so cost_analysis models the kernel's bytes (HLO cannot see inside a
+        pallas custom call); see EXPERIMENTS.md §Perf pair 3.
+    """
+    B, S, D = x.shape
+    E = scfg.expand * D
+    N = scfg.d_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    xs = jax.nn.silu(_causal_conv(xs_raw, p["conv_w"], p["conv_b"]))
+    dbc = jnp.einsum("bse,er->bsr", xs, p["x_proj"])
+    r = p["dt_proj"].shape[0]
+    dt_r, B_in, C_in = jnp.split(dbc, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"])
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [E,N]
+
+    if mode == "kernel":
+        from repro.kernels.ops import mamba_scan_op
+        ys2, h_fin = mamba_scan_op(dt.astype(jnp.float32),
+                                   B_in.astype(jnp.float32),
+                                   C_in.astype(jnp.float32),
+                                   xs.astype(jnp.float32), A)
+        return _finish(ys2, xs, xs_raw, z, x, p, B, E, h_fin, return_state)
+    if mode == "stub":
+        # kernel-footprint stand-in: reads dt/B/C/x once, writes y once
+        ys2 = (dt.astype(jnp.float32) * xs.astype(jnp.float32)
+               * jnp.sum(B_in.astype(jnp.float32) * C_in.astype(jnp.float32),
+                         axis=-1, keepdims=True))
+        h_fin = jnp.zeros((B, E, N), jnp.float32)
+        return _finish(ys2, xs, xs_raw, z, x, p, B, E, h_fin, return_state)
+
+    Lc = min(chunk, S)
+    n_chunks = math.ceil(S / Lc)
+    pad = n_chunks * Lc - S
+    def padc(t):
+        return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2)) if pad else t
+    dtc = padc(dt).reshape(B, n_chunks, Lc, E).swapaxes(0, 1)
+    Bc = padc(B_in).reshape(B, n_chunks, Lc, N).swapaxes(0, 1)
+    Cc = padc(C_in).reshape(B, n_chunks, Lc, N).swapaxes(0, 1)
+    xc = padc(xs).reshape(B, n_chunks, Lc, E).swapaxes(0, 1)
+
+    def chunk_body(h0, inp):
+        dt_i, B_i, C_i, x_i = inp
+        aprod, bcum = _ssm_inner(dt_i.astype(jnp.float32),
+                                 B_i.astype(jnp.float32),
+                                 C_i.astype(jnp.float32),
+                                 x_i.astype(jnp.float32), A)
+        h = aprod * h0[:, None] + bcum                    # [B,Lc,E,N]
+        y = jnp.einsum("blen,bln->ble", h, C_i.astype(jnp.float32))
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, E, N), jnp.float32)
+    if unroll:
+        h, ylist = h0, []
+        for i in range(n_chunks):
+            h, yi = chunk_body(h, (dtc[i], Bc[i], Cc[i], xc[i]))
+            ylist.append(yi)
+        h_fin, ys = h, jnp.stack(ylist)
+    else:
+        h_fin, ys = jax.lax.scan(chunk_body, h0, (dtc, Bc, Cc, xc))
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * Lc, E)[:, :S]
+    return _finish(y, xs, xs_raw, z, x, p, B, E, h_fin, return_state)
+
+
+def _finish(y, xs, xs_raw, z, x, p, B, E, h_fin, return_state):
+    """Shared mamba epilogue: skip term, gate, out-projection, state."""
+    y = y + xs.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        K = p["conv_w"].shape[0]
+        pad = jnp.zeros((B, K - 1, E), xs_raw.dtype)
+        conv_buf = jnp.concatenate([pad, xs_raw], axis=1)[:, -(K - 1):]
+        return out, (conv_buf, h_fin)
+    return out
+
+
+def mamba_decode(x1, p, scfg: SSMConfig, conv_buf, state):
+    """One-token decode. x1: [B,1,D]; conv_buf: [B,K-1,E]; state: [B,E,N]."""
+    B, _, D = x1.shape
+    N = scfg.d_state
+    xz = jnp.einsum("bsd,de->bse", x1, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    new_buf = jnp.concatenate([conv_buf[:, 1:], xs.astype(conv_buf.dtype)], axis=1)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"], buf=conv_buf))
+    dbc = jnp.einsum("bse,er->bsr", xs, p["x_proj"])
+    r = p["dt_proj"].shape[0]
+    dt_r, B_in, C_in = jnp.split(dbc, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"])
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * A)   # [B,E,N]
+    b = (dt[:, 0] * xs[:, 0]).astype(jnp.float32)[..., None] \
+        * B_in[:, 0, None, :].astype(jnp.float32)
+    h = a * state + b
+    y = jnp.einsum("ben,bn->be", h, C_in[:, 0].astype(jnp.float32))
+    y = y + xs[:, 0].astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x1.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None]
+    return out, new_buf, h

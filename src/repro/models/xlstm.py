@@ -1,0 +1,185 @@
+"""xLSTM blocks: chunk-friendly parallel mLSTM and recurrent sLSTM.
+
+TPU adaptation: the mLSTM matrix-memory recurrence admits an attention-like
+parallel form  h_t = (sum_s w_ts (q_t.k_s) v_s) / n_t  with decay weights
+w_ts = exp(G_s - M_t), G_s = log i_s - F_s, F the cumulative log-forget and
+M_t a running max for stabilization — i.e. pure MXU matmuls (blocked over
+queries for long sequences).  The sLSTM scalar-memory recurrence is
+non-associative (exponential gating with a normalizer), so it runs as a
+``lax.scan`` over time with the input projections hoisted out of the loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.models.layers import NEG_INF
+
+
+# ------------------------------------------------------------------ mLSTM --
+def _mlstm_parallel(q, k, v, logi, logf, block: int = 0, unroll: bool = False):
+    """q,k,v: [B,S,H,dh]; logi/logf: [B,S,H]. Returns [B,S,H,dh]."""
+    B, S, H, dh = q.shape
+    F = jnp.cumsum(logf, axis=1)             # [B,S,H]
+    G = logi - F                             # log i_s - F_s
+    M = jax.lax.cummax(G, axis=1)            # running max for stability
+    qf = q.astype(jnp.float32) * dh ** -0.5
+    kf = k.astype(jnp.float32)
+
+    def blk(qb, Fb_unused, Mb, offset):
+        # scores for query block against all keys (causal-masked)
+        s = jnp.einsum("bqhd,bshd->bhqs", qb, kf)
+        logw = G.swapaxes(1, 2)[:, :, None, :] - Mb.swapaxes(1, 2)[..., None]
+        qi = jnp.arange(qb.shape[1])[:, None] + offset
+        ki = jnp.arange(S)[None, :]
+        w = jnp.where((ki <= qi)[None, None], jnp.exp(logw), 0.0)
+        sw = s * w
+        num = jnp.einsum("bhqs,bshd->bqhd", sw, v.astype(jnp.float32))
+        den = jnp.maximum(jnp.abs(sw.sum(-1)), 1.0).swapaxes(1, 2)[..., None]
+        return num / den
+
+    if not block or block >= S:
+        return blk(qf, F, M, 0).astype(v.dtype)
+    n_blocks = S // block
+    qb = qf.reshape(B, n_blocks, block, H, dh).swapaxes(0, 1)
+    Mb = M.reshape(B, n_blocks, block, H).swapaxes(0, 1)
+    if unroll:
+        ys = jnp.stack([blk(qb[i], None, Mb[i], i * block)
+                        for i in range(n_blocks)])
+    else:
+        offs = jnp.arange(n_blocks) * block
+        ys = jax.lax.map(lambda t: blk(t[0], None, t[1], t[2]), (qb, Mb, offs))
+    return ys.swapaxes(0, 1).reshape(B, S, H, dh).astype(v.dtype)
+
+
+def mlstm_forward(x, p, xcfg: XLSTMConfig, *, block: int = 0,
+                  return_state: bool = False, unroll: bool = False):
+    """mLSTM block. x: [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    H = xcfg.n_heads
+    up = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    xi, z = jnp.split(up, 2, axis=-1)                 # [B,S,E] each
+    E = xi.shape[-1]
+    dh = E // H
+    q = jnp.einsum("bse,ef->bsf", xi, p["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", xi, p["wk"]).reshape(B, S, H, dh)
+    v = jnp.einsum("bse,ef->bsf", xi, p["wv"]).reshape(B, S, H, dh)
+    logi = jnp.einsum("bse,eh->bsh", xi.astype(jnp.float32), p["w_i"]) + p["b_i"]
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", xi.astype(jnp.float32), p["w_f"]) + p["b_f"])
+    h = _mlstm_parallel(q, k, v, logi, logf, block=block, unroll=unroll)
+    # per-head group norm
+    hf = h.astype(jnp.float32)
+    mu = hf.mean(-1, keepdims=True)
+    var = hf.var(-1, keepdims=True)
+    h = ((hf - mu) * jax.lax.rsqrt(var + 1e-6) * p["gn_scale"]).astype(x.dtype)
+    h = h.reshape(B, S, E) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, p["down_proj"])
+    if return_state:
+        # final recurrent states (for prefill -> decode handoff)
+        F = jnp.cumsum(logf, axis=1)
+        G = logi - F
+        M_S = jnp.max(G, axis=1)                              # [B,H]
+        w = jnp.exp(G - M_S[:, None])                         # [B,S,H]
+        kf = k.astype(jnp.float32) * dh ** -0.5
+        C = jnp.einsum("bsh,bshd,bshe->bhde", w, kf, v.astype(jnp.float32))
+        n = jnp.einsum("bsh,bshd->bhd", w, kf)
+        m = F[:, -1] + M_S
+        return out, (C, n, m)
+    return out
+
+
+def mlstm_decode(x1, p, xcfg: XLSTMConfig, C, n, m):
+    """One-token mLSTM. C: [B,H,dh,dh]; n: [B,H,dh]; m: [B,H]."""
+    B, _, D = x1.shape
+    H = xcfg.n_heads
+    up = jnp.einsum("bsd,de->bse", x1, p["up_proj"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    E = xi.shape[-1]
+    dh = E // H
+    q = jnp.einsum("bse,ef->bsf", xi, p["wq"]).reshape(B, H, dh)
+    k = jnp.einsum("bse,ef->bsf", xi, p["wk"]).reshape(B, H, dh)
+    v = jnp.einsum("bse,ef->bsf", xi, p["wv"]).reshape(B, H, dh)
+    logi = (jnp.einsum("be,eh->bh", xi[:, 0].astype(jnp.float32), p["w_i"])
+            + p["b_i"])
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("be,eh->bh", xi[:, 0].astype(jnp.float32), p["w_f"]) + p["b_f"])
+    m_new = jnp.maximum(logf + m, logi)
+    fs = jnp.exp(logf + m - m_new)[..., None]
+    is_ = jnp.exp(logi - m_new)[..., None]
+    kf = k.astype(jnp.float32) * dh ** -0.5
+    C_new = fs[..., None] * C + is_[..., None] * (kf[..., :, None]
+                                                  * v.astype(jnp.float32)[..., None, :])
+    n_new = fs * n + is_ * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhd->bhe", C_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qf)), 1.0)
+    h = num / den[..., None]
+    mu = h.mean(-1, keepdims=True)
+    var = h.var(-1, keepdims=True)
+    h = ((h - mu) * jax.lax.rsqrt(var + 1e-6) * p["gn_scale"]).astype(x1.dtype)
+    h = h.reshape(B, 1, E) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, p["down_proj"])
+    return out, C_new, n_new, m_new
+
+
+# ------------------------------------------------------------------ sLSTM --
+def _slstm_cell(carry, gates_x, R, heads):
+    """One sLSTM step. carry: (c,n,h,m) each [B,E]; gates_x: [B,4E] (Wx+b),
+    gate-major layout (i,f,z,o); R: [H, dh, 4, dh] block-diag recurrence."""
+    c, n, h, m = carry
+    B, E = c.shape
+    H = heads
+    dh = E // H
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hdgf->bghf", hh, R).reshape(B, 4 * E)
+    gi, gf, gz, go = jnp.split(gates_x + rec, 4, axis=-1)
+    m_new = jnp.maximum(gf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(x, p, xcfg: XLSTMConfig, *, return_state: bool = False):
+    """sLSTM block. x: [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    H = xcfg.n_heads
+    E = p["w_gates"].shape[1] // 4
+    gates_x = (jnp.einsum("bsd,dg->bsg", x, p["w_gates"]).astype(jnp.float32)
+               + p["b_gates"])  # [B,S,4E]
+    R = p["r_gates"]  # [H, dh, 4, dh]
+
+    def step(carry, g):
+        new = _slstm_cell(carry, g, R, H)
+        return new, new[2]
+
+    init = tuple(jnp.zeros((B, E), jnp.float32) for _ in range(4))
+    fin, hs = jax.lax.scan(step, init, gates_x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)  # [B,S,E]
+    # gated up/down projection (proj factor 4/3)
+    u = jnp.einsum("bse,ef->bsf", h.astype(x.dtype), p["up_proj"])
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    y = jax.nn.silu(u1) * u2
+    out = jnp.einsum("bsf,fd->bsd", y, p["down_proj"])
+    if return_state:
+        return out, fin
+    return out
+
+
+def slstm_decode(x1, p, xcfg: XLSTMConfig, c, n, h, m):
+    """One-token sLSTM. states: [B,E] each."""
+    H = xcfg.n_heads
+    gates_x = (jnp.einsum("bsd,dg->bsg", x1, p["w_gates"])[:, 0]
+               .astype(jnp.float32) + p["b_gates"])
+    c, n, h, m = _slstm_cell((c, n, h, m), gates_x, p["r_gates"], H)
+    u = jnp.einsum("be,ef->bf", h.astype(x1.dtype), p["up_proj"])
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    y = jax.nn.silu(u1) * u2
+    out = jnp.einsum("bf,fd->bd", y, p["down_proj"])[:, None]
+    return out, c, n, h, m

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adam, make_optimizer, sgd, zo_sgd,
+                                    OptState)
+from repro.optim.schedule import constant, cosine, warmup_cosine

@@ -1,0 +1,77 @@
+"""Minimal optimizer library (pytree-generic, jittable)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any = None
+    nu: Any = None
+
+
+def sgd(lr: float, momentum: float = 0.0):
+    def init(params):
+        mu = (jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+              if momentum else None)
+        return OptState(jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(grads, state, params):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state.mu, grads)
+            upd = jax.tree.map(lambda m: -lr * m, mu)
+            return upd, OptState(state.step + 1, mu=mu)
+        upd = jax.tree.map(lambda g: -lr * g, grads)
+        return upd, OptState(state.step + 1)
+
+    return init, update
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    def init(params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params)
+        return OptState(jnp.zeros((), jnp.int32), mu=z(), nu=z())
+
+    def update(grads, state, params):
+        t = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v: -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        return upd, OptState(t, mu=mu, nu=nu)
+
+    return init, update
+
+
+def zo_sgd(lr: float, momentum: float = 0.0):
+    """ZO-SGD over a flat sparse value vector (MEERKAT client optimizer)."""
+    def init(n: int):
+        mu = jnp.zeros((n,), jnp.float32) if momentum else None
+        return OptState(jnp.zeros((), jnp.int32), mu=mu)
+
+    def update(gz, state, _=None):
+        """gz = g * z (the reconstructed sparse ZO gradient)."""
+        if momentum:
+            mu = momentum * state.mu + gz
+            return -lr * mu, OptState(state.step + 1, mu=mu)
+        return -lr * gz, OptState(state.step + 1)
+
+    return init, update
+
+
+def make_optimizer(name: str, lr: float, **kw):
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adam":
+        return adam(lr, **kw)
+    raise ValueError(name)

@@ -1,0 +1,89 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+``decode_32k`` / ``long_500k`` dry-run shapes lower :func:`step_fn` (one
+token against a seq_len cache); this module provides the runnable engine for
+the small-scale demos and tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+def generate(model: Model, params, batch: Dict, max_new_tokens: int,
+             S_max: int = 0, temperature: float = 0.0, key=None):
+    """Prefill the prompt then decode ``max_new_tokens`` greedily (or with
+    temperature sampling).  Returns int32 [B, max_new_tokens]."""
+    prompt = batch["tokens"]
+    B, S = prompt.shape
+    extra = (model.cfg.n_patches
+             if model.cfg.frontend == "vision_stub" else 0)
+    S_max = S_max or (S + extra + max_new_tokens)
+    logits, cache = model.prefill(params, batch, S_max=S_max)
+    key = key if key is not None else jax.random.key(0)
+
+    def pick(logits, key):
+        if temperature > 0:
+            return jax.random.categorical(key, logits / temperature, axis=-1)
+        return jnp.argmax(logits, axis=-1)
+
+    @jax.jit
+    def step(carry, _):
+        logits, cache, key = carry
+        key, sub = jax.random.split(key)
+        tok = pick(logits, sub).astype(jnp.int32)
+        logits, cache = model.decode_step(params, tok, cache)
+        return (logits, cache, key), tok
+
+    (_, cache, _), toks = jax.lax.scan(step, (logits, cache, key),
+                                       None, length=max_new_tokens)
+    return toks.swapaxes(0, 1)  # [B, T]
+
+
+class ServeEngine:
+    """Minimal batched-request engine: collects requests up to a batch size,
+    pads prompts to a bucket, runs prefill+decode."""
+
+    def __init__(self, model: Model, params, max_batch: int = 8,
+                 bucket: int = 64):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.bucket = bucket
+        self.queue = []
+
+    def submit(self, tokens: np.ndarray, max_new_tokens: int = 16):
+        self.queue.append((np.asarray(tokens, np.int32), max_new_tokens))
+
+    def flush(self):
+        """Run all queued requests in padded batches; returns list of
+        generated-token arrays in submit order."""
+        out = []
+        while self.queue:
+            chunk, self.queue = (self.queue[:self.max_batch],
+                                 self.queue[self.max_batch:])
+            S = max(len(t) for t, _ in chunk)
+            S = ((S + self.bucket - 1) // self.bucket) * self.bucket
+            new = max(m for _, m in chunk)
+            toks = np.zeros((len(chunk), S), np.int32)
+            for i, (t, _) in enumerate(chunk):
+                toks[i, S - len(t):] = t  # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.model.cfg.frontend == "vision_stub":
+                batch["patch_embeds"] = jnp.zeros(
+                    (len(chunk), self.model.cfg.n_patches,
+                     self.model.cfg.d_model), jnp.float32)
+            if self.model.cfg.frontend == "audio_stub":
+                nf = self.model.cfg.encoder.n_frames
+                batch["audio_embeds"] = jnp.zeros(
+                    (len(chunk), nf, self.model.cfg.d_model), jnp.float32)
+            gen = generate(self.model, self.params, batch, new)
+            for i, (_, m) in enumerate(chunk):
+                out.append(np.asarray(gen[i, :m]))
+        return out

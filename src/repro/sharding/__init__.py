@@ -1,0 +1,2 @@
+from repro.sharding.rules import (batch_specs, cache_specs, mask_specs,
+                                  param_specs, token_spec)

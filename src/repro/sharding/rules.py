@@ -1,0 +1,208 @@
+"""Logical -> mesh sharding rules for every architecture.
+
+Megatron-style tensor parallelism over the 'model' axis:
+  * column-parallel: QKV projections, MLP up/gate, router-free expert stacks
+  * row-parallel: attention out-proj, MLP down
+  * expert-parallel: MoE expert stacks sharded on the expert dim
+  * vocab-parallel embeddings / LM head
+Batch (= FL client) dims shard over ('pod','data'); the long_500k decode
+shape (B=1) shards KV caches over the *sequence* dim instead.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import InputShape, MeshConfig, ModelConfig
+
+P = jax.sharding.PartitionSpec
+
+# leaf name -> how to shard (see _leaf_spec)
+_COL = {"wq", "wk", "wv", "bq", "bk", "bv", "w1", "w3", "sw1", "sw3",
+        "in_proj", "up_proj", "w_gates", "b_gates", "dt_proj", "conv_w",
+        "lora_qb", "lora_vb"}
+_ROW = {"wo", "w2", "sw2", "down_proj", "out_proj"}
+_EDIM1 = {"conv_b", "dt_bias", "A_log", "D"}  # mamba per-E leaves: dim after n
+
+
+def _div(n: int, by: int) -> bool:
+    return n % by == 0
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], tp: int):
+    name = path.rsplit("'", 2)[-2] if "'" in path else path
+    nd = len(shape)
+    if name == "embed":
+        return P("model", None) if _div(shape[0], tp) else P(None, None)
+    if name == "lm_head":
+        return P(None, "model") if _div(shape[1], tp) else P(None, None)
+    if name in ("w1", "w2", "w3") and nd == 4:  # MoE expert stacks [n,E,D,F]
+        if _div(shape[1], tp):
+            return P(None, "model", None, None)
+        return P(*([None] * nd))
+    if name in _COL and nd >= 2:
+        if _div(shape[-1], tp):
+            return P(*([None] * (nd - 1)), "model")
+    if name in _ROW and nd >= 2:
+        if _div(shape[-2], tp):
+            return P(*([None] * (nd - 2)), "model", None)
+    if name in _EDIM1 and nd >= 2:
+        if _div(shape[1], tp):
+            return P(None, "model", *([None] * (nd - 2)))
+    return P(*([None] * nd))
+
+
+_FSDP_THRESHOLD = 64 * 1024 * 1024  # bytes per (tp-sharded) leaf shard
+
+
+def _add_fsdp(spec: P, shape: Tuple[int, ...], mesh_cfg: MeshConfig,
+              itemsize: int = 2):
+    """ZeRO-3-style second sharding axis: if a leaf's per-shard size still
+    exceeds the threshold after tensor parallelism, also shard the largest
+    free dim over the batch axes (GSPMD all-gathers it per scan iteration)."""
+    dp = mesh_cfg.data * mesh_cfg.pods
+    used = {a for s in spec if s for a in ((s,) if isinstance(s, str) else s)}
+    per_shard = np.prod(shape) * itemsize
+    for s, dim in zip(spec, shape):
+        if s is not None:
+            per_shard //= mesh_cfg.model if s == "model" else 1
+    if per_shard <= _FSDP_THRESHOLD or "data" in used:
+        return spec
+    dims = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in dims:
+        if spec[i] is None and shape[i] % dp == 0 and shape[i] >= dp:
+            new = list(spec)
+            new[i] = mesh_cfg.batch_axes if mesh_cfg.pods > 1 else "data"
+            return P(*new)
+    return spec
+
+
+def param_specs(cfg: ModelConfig, abstract_params, mesh_cfg: MeshConfig,
+                train: bool = True):
+    """PartitionSpec pytree matching the parameter tree.
+
+    ``train=False`` (prefill/decode) skips the ZeRO-3 second axis: inference
+    re-reads weights every step, so FSDP would all-gather large leaves per
+    token (§Perf iteration 2 removed a per-step 136 MB lm_head gather)."""
+    tp = mesh_cfg.model
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for p, l in flat:
+        s = _leaf_spec(jax.tree_util.keystr(p), l.shape, tp)
+        if train:
+            s = _add_fsdp(s, l.shape, mesh_cfg)
+        specs.append(s)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def fsdp_only_specs(cfg: ModelConfig, abstract_params, mesh_cfg: MeshConfig):
+    """Pure-DP + FSDP sharding for the ZO step (beyond-paper, §Perf pair 2).
+
+    ZO fine-tuning runs *no backward pass*, so Megatron tensor parallelism
+    only buys per-layer activation all-reduces it doesn't need.  Instead:
+    every device is a data shard (the FL-client axis spans the whole mesh)
+    and each weight leaf is sharded over all devices on its largest
+    divisible dim; GSPMD all-gathers one period's weights per scan step.
+    Collective per forward = total weight bytes (vs 2 x activation psums
+    per *layer* under TP)."""
+    axes = tuple(mesh_cfg.axis_names)  # e.g. ("data", "model")
+    n = mesh_cfg.n_devices
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for p, l in flat:
+        spec = [None] * len(l.shape)
+        dims = sorted(range(len(l.shape)), key=lambda i: -l.shape[i])
+        for i in dims:
+            if l.shape[i] % n == 0:
+                spec[i] = axes
+                break
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def token_spec(shape: InputShape, mesh_cfg: MeshConfig):
+    ba = mesh_cfg.batch_axes
+    dp = mesh_cfg.data * mesh_cfg.pods
+    if shape.global_batch % dp:
+        return P(None, None)
+    return P(ba, None)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh_cfg: MeshConfig):
+    """Specs for the input batch dict (same keys as model.input_specs)."""
+    ba = mesh_cfg.batch_axes
+    dp = mesh_cfg.data * mesh_cfg.pods
+    b_ok = shape.global_batch % dp == 0
+    bspec = ba if b_ok else None
+    out = {}
+    if shape.kind == "decode":
+        out["token"] = P(bspec)
+    else:
+        out["tokens"] = P(bspec, None)
+        if cfg.frontend == "audio_stub":
+            out["audio_embeds"] = P(bspec, None, None)
+        elif cfg.frontend == "vision_stub":
+            out["patch_embeds"] = P(bspec, None, None)
+    return out
+
+
+def _cache_leaf_spec(path: str, shape: Tuple[int, ...], mesh_cfg: MeshConfig,
+                     seq_shard: bool):
+    """Cache leaves: [n, B, ...] stacked over periods on dim 0."""
+    ba = mesh_cfg.batch_axes
+    dp = mesh_cfg.data * mesh_cfg.pods
+    tp = mesh_cfg.model
+    name = path.rsplit("'", 2)[-2] if "'" in path else path
+    nd = len(shape)
+    if name == "pos":
+        return P()
+    b_ok = nd >= 2 and shape[1] % dp == 0 and not seq_shard
+    bspec = ba if b_ok else None
+    if name in ("k", "v", "ck", "cv"):  # [n, B, W, KV, hd]
+        # Preference order: KV heads over 'model' -> sequence over 'model'
+        # -> head_dim as last resort.  Sharding head_dim makes the score
+        # matmul's contraction dim sharded and GSPMD all-gathers the whole
+        # cache per layer (§Perf iteration 1: 4.76s -> ms of collective).
+        hspec = "model" if shape[3] % tp == 0 else None
+        sspec = None
+        if seq_shard and shape[2] % dp == 0:
+            # B=1 long-context: sequence over batch axes (+ model if free)
+            if hspec is None and shape[2] % (dp * tp) == 0:
+                sspec = tuple(ba) + ("model",)
+            else:
+                sspec = ba
+        elif hspec is None and shape[2] % tp == 0:
+            sspec = "model"
+        dspec = ("model" if (hspec is None and sspec is None
+                             and shape[4] % tp == 0) else None)
+        return P(None, bspec, sspec, hspec, dspec)
+    if name == "conv":      # [n, B, K-1, E]
+        espec = "model" if shape[3] % tp == 0 else None
+        return P(None, bspec, None, espec)
+    if name == "state":     # [n, B, E, N]
+        espec = "model" if shape[2] % tp == 0 else None
+        return P(None, bspec, espec, None)
+    if name in ("c", "n", "h", "m") and nd == 3:  # slstm [n, B, E]
+        espec = "model" if shape[2] % tp == 0 else None
+        return P(None, bspec, espec)
+    if name in ("C",):      # mlstm [n, B, H, dh, dh]
+        return P(None, bspec, *([None] * (nd - 2)))
+    return P(None, bspec, *([None] * max(nd - 2, 0)))
+
+
+def cache_specs(cfg: ModelConfig, abstract_cache, shape: InputShape,
+                mesh_cfg: MeshConfig):
+    dp = mesh_cfg.data * mesh_cfg.pods
+    seq_shard = shape.global_batch % dp != 0  # B=1 long-context decode
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    specs = [_cache_leaf_spec(jax.tree_util.keystr(p), l.shape, mesh_cfg,
+                              seq_shard) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def mask_specs(abstract_idx_tree, mesh_cfg: MeshConfig, replicate=True):
+    """Sparse-mask index arrays: replicated baseline (each device holds the
+    full coordinate list); the shard-aligned layout is a perf iteration."""
+    return jax.tree.map(lambda l: P(None), abstract_idx_tree)

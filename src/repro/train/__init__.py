@@ -1,0 +1,1 @@
+from repro.train.first_order import fedavg_round, make_train_step

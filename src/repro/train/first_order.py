@@ -1,0 +1,46 @@
+"""First-order (backprop) training: used for (a) sensitivity-mask
+calibration gradients, (b) the server-held GradIP pre-training gradient, and
+(c) the FedAvg / data-parallel baseline the roofline compares against."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import make_optimizer
+
+
+def make_train_step(loss_fn: Callable, optimizer: str = "sgd",
+                    lr: float = 1e-3, **kw):
+    """Returns (init_state, jittable step(params, opt_state, batch))."""
+    init, update = make_optimizer(optimizer, lr, **kw)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        upd, opt_state = update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, upd)
+        return params, opt_state, loss
+
+    return init, jax.jit(step)
+
+
+def fedavg_round(loss_fn: Callable, params, client_batches, lr: float,
+                 local_steps: int = 1):
+    """One FedAvg round (first-order baseline): each client runs SGD locally,
+    the server averages the resulting models.
+
+    client_batches: pytree with leading [K, T, b, ...]."""
+
+    def client_run(p, batches):
+        def one(pp, b):
+            g = jax.grad(loss_fn)(pp, b)
+            pp = jax.tree.map(lambda w, gg: w - lr * gg.astype(w.dtype), pp, g)
+            return pp, None
+
+        pT, _ = jax.lax.scan(one, p, batches)
+        return pT
+
+    client_params = jax.vmap(client_run, in_axes=(None, 0))(params,
+                                                            client_batches)
+    return jax.tree.map(lambda c: jnp.mean(c, axis=0), client_params)

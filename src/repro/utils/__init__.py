@@ -1,0 +1,2 @@
+from repro.utils.tree import (flat_size, leaf_paths, tree_concat_flat,
+                              tree_from_flat, tree_zeros_like_flat)

@@ -1,0 +1,50 @@
+"""Pytree <-> flat-vector utilities used by the ZO param-space machinery."""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def leaf_paths(tree: Any) -> List[str]:
+    """Stable, human-readable path string per leaf (in tree_flatten order)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+def flat_size(tree: Any) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_concat_flat(tree: Any) -> jnp.ndarray:
+    """Concatenate all leaves into a single flat f32 vector."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+
+def tree_from_flat(template: Any, vec: jnp.ndarray) -> Any:
+    """Inverse of :func:`tree_concat_flat` given a shape template."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape))
+        out.append(vec[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_zeros_like_flat(tree: Any) -> jnp.ndarray:
+    return jnp.zeros((flat_size(tree),), jnp.float32)
+
+
+def leaf_offsets(tree: Any) -> List[Tuple[str, int, int]]:
+    """(path, offset, size) per leaf in flatten order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out, off = [], 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        out.append((jax.tree_util.keystr(path), off, n))
+        off += n
+    return out

@@ -1,0 +1,93 @@
+"""Equivalence of the attention implementations (hypothesis property tests).
+
+gqa_attention (repeat-KV oracle) == blocked_gqa_attention (q-chunked)
+== online_gqa_attention (flash-style online softmax, §Perf pair 2)
+== grouped_gqa_attention (decode path, §Perf pair 1).
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.tiny import TINY
+from repro.models import layers as L
+
+hypothesis.settings.register_profile(
+    "fast", max_examples=12, deadline=None,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("fast")
+
+
+def _qkv(seed, B, S, H, KV, hd):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    return (jax.random.normal(k1, (B, S, H, hd)),
+            jax.random.normal(k2, (B, S, KV, hd)),
+            jax.random.normal(k3, (B, S, KV, hd)))
+
+
+@hypothesis.given(
+    seed=st.integers(0, 999),
+    B=st.integers(1, 3),
+    KV=st.sampled_from([1, 2, 4]),
+    G=st.sampled_from([1, 2, 4]),
+    hd=st.sampled_from([16, 32]),
+    window=st.sampled_from([0, 48]),
+    softcap=st.sampled_from([0.0, 30.0]),
+)
+def test_online_matches_oracle(seed, B, KV, G, hd, window, softcap):
+    S, H = 128, KV * G
+    cfg = TINY.replace(n_heads=H, n_kv_heads=KV, attn_softcap=softcap)
+    q, k, v = _qkv(seed, B, S, H, KV, hd)
+    ref = L.gqa_attention(q, k, v, L.causal_mask(S, S, window), cfg, None)
+    got = L.online_gqa_attention(q, k, v, cfg, window=window,
+                                 q_block=32, kv_block=64)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-3)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 999),
+    B=st.integers(1, 3),
+    KV=st.sampled_from([1, 2, 4]),
+    G=st.sampled_from([1, 2, 7]),
+    W=st.sampled_from([64, 96]),
+    frac=st.floats(0.1, 1.0),
+)
+def test_grouped_decode_matches_oracle(seed, B, KV, G, W, frac):
+    """grouped_gqa_attention == gqa_attention for one-token decode."""
+    H, hd = KV * G, 32
+    cfg = TINY.replace(n_heads=H, n_kv_heads=KV)
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(k1, (B, 1, H, hd))
+    k = jax.random.normal(k2, (B, W, KV, hd))
+    v = jax.random.normal(k3, (B, W, KV, hd))
+    cur = max(0, int(W * frac) - 1)
+    valid = (jnp.arange(W)[None, None, :] <= cur)
+    ref = L.gqa_attention(q, k, v, valid, cfg, None)
+    got = L.grouped_gqa_attention(q, k, v, valid, cfg, None)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-3)
+
+
+def test_blocked_and_online_agree_with_full():
+    cfg = TINY.replace(n_heads=4, n_kv_heads=2)
+    q, k, v = _qkv(7, 2, 256, 4, 2, 32)
+    full = L.gqa_attention(q, k, v, L.causal_mask(256, 256), cfg, None)
+    blocked = L.blocked_gqa_attention(q, k, v, cfg, None, window=0,
+                                      q_block=64)
+    online = L.online_gqa_attention(q, k, v, cfg, q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(full),
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(online), np.asarray(full),
+                               atol=2e-3)
+
+
+def test_online_unroll_matches_scan():
+    cfg = TINY.replace(n_heads=4, n_kv_heads=2)
+    q, k, v = _qkv(11, 1, 128, 4, 2, 16)
+    a = L.online_gqa_attention(q, k, v, cfg, q_block=32, kv_block=32,
+                               unroll=False)
+    b = L.online_gqa_attention(q, k, v, cfg, q_block=32, kv_block=32,
+                               unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

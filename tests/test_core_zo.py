@@ -1,0 +1,165 @@
+"""Properties of the sparse-ZO machinery: estimator correctness, virtual-path
+exactness (hypothesis), seed determinism, space algebra."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DenseSpace, MaskedSpace, make_local_run,
+                        projected_gradient, random_mask, reconstruct_delta,
+                        reconstruct_grad_vecs, round_keys)
+from repro.core.zo import local_step
+
+hypothesis.settings.register_profile(
+    "fast", max_examples=15, deadline=None,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("fast")
+
+
+def quad_params(key, d=24):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (d,)), "b": jax.random.normal(k2, (4, 6))}
+
+
+def quad_loss(params, batch):
+    v = jnp.concatenate([params["a"], params["b"].reshape(-1)])
+    return 0.5 * jnp.sum((v - batch["target"]) ** 2)
+
+
+def test_projected_gradient_matches_directional_derivative():
+    params = quad_params(jax.random.key(0))
+    batch = {"target": jnp.arange(48.0) / 48.0}
+    space = DenseSpace(params)
+    z = space.sample_z(jax.random.key(1))
+    delta = jnp.zeros((space.n,))
+    g = projected_gradient(quad_loss, params, space, delta, z, 1e-4, batch)
+    grad = jax.grad(quad_loss)(params, batch)
+    expected = float(jnp.dot(space.slice(grad), z))
+    assert abs(float(g) - expected) < 1e-2 * max(1.0, abs(expected))
+
+
+def test_zo_estimator_unbiased():
+    """E[g * z] ~= m (.) grad  (Lemma B.8) — statistical check."""
+    params = quad_params(jax.random.key(0))
+    batch = {"target": jnp.zeros(48)}
+    space = random_mask(params, density=0.25, seed=1)
+    grad_masked = space.slice(jax.grad(quad_loss)(params, batch))
+
+    def one(key):
+        z = space.sample_z(key)
+        g = projected_gradient(quad_loss, params, space,
+                               jnp.zeros(space.n), z, 1e-4, batch)
+        return g * z
+
+    keys = jax.random.split(jax.random.key(42), 4000)
+    est = jnp.mean(jax.vmap(one)(keys), axis=0)
+    err = float(jnp.linalg.norm(est - grad_masked)
+                / (jnp.linalg.norm(grad_masked) + 1e-9))
+    assert err < 0.15, err
+
+
+@hypothesis.given(T=st.integers(1, 8), seed=st.integers(0, 10_000),
+                  lr=st.floats(1e-4, 1e-1), density=st.floats(0.05, 1.0))
+def test_virtual_path_exactness(T, seed, lr, density):
+    """Paper Alg. 2 step 2: the server's reconstruction from (seeds, scalars)
+    equals the client's local trajectory exactly."""
+    params = quad_params(jax.random.key(3))
+    space = random_mask(params, density=density, seed=seed)
+    keys = round_keys(seed, 0, T)
+    targets = jax.random.normal(jax.random.key(seed + 1), (T, 48))
+    batches = {"target": targets}
+    run = make_local_run(quad_loss, space, eps=1e-3, lr=lr)
+    delta_client, gs = run(params, keys, batches,
+                           jnp.zeros((space.n,), jnp.float32))
+    delta_server = reconstruct_delta(space, keys, gs, lr)
+    np.testing.assert_allclose(np.asarray(delta_client),
+                               np.asarray(delta_server), atol=1e-6)
+
+
+def test_reconstructed_grad_vecs_shape_and_value():
+    params = quad_params(jax.random.key(4))
+    space = random_mask(params, density=0.5, seed=2)
+    keys = round_keys(7, 0, 3)
+    gs = jnp.asarray([1.0, -2.0, 0.5])
+    vecs = reconstruct_grad_vecs(space, keys, gs)
+    assert vecs.shape == (3, space.n)
+    z0 = space.sample_z(keys[0])
+    np.testing.assert_allclose(vecs[0], gs[0] * z0, atol=1e-7)
+
+
+def test_seed_ladder_deterministic_and_distinct():
+    a = round_keys(0, 3, 5)
+    b = round_keys(0, 3, 5)
+    c = round_keys(0, 4, 5)
+    assert jnp.array_equal(jax.random.key_data(a), jax.random.key_data(b))
+    assert not jnp.array_equal(jax.random.key_data(a), jax.random.key_data(c))
+
+
+@hypothesis.given(density=st.floats(0.02, 1.0), seed=st.integers(0, 1000))
+def test_space_add_slice_roundtrip(density, seed):
+    """slice(add(0, v)) == v for any masked space (coordinates are disjoint)."""
+    params = quad_params(jax.random.key(5))
+    space = random_mask(params, density=density, seed=seed)
+    v = jax.random.normal(jax.random.key(seed), (space.n,))
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    out = space.slice(space.add(zeros, v))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), atol=1e-6)
+
+
+def test_local_step_reduces_quadratic_loss_on_average():
+    # Dense ZO-SGD on a d-dim quadratic contracts in expectation iff
+    # 1 - 2*lr + lr^2 (d+2) < 1  =>  lr < 2/(d+2).  d=48 here, so lr must
+    # be well below 4e-2; lr=1e-2 gives factor ~0.985/step.
+    params = quad_params(jax.random.key(6))
+    batch = {"target": jnp.zeros(48)}
+    space = DenseSpace(params)
+    delta = jnp.zeros((space.n,))
+    l0 = float(quad_loss(params, batch))
+    for i in range(80):
+        delta, g = local_step(quad_loss, params, space, delta,
+                              jax.random.key(100 + i), 1e-3, 1e-2, batch)
+    l1 = float(quad_loss(space.add(params, delta), batch))
+    assert l1 < l0
+
+
+@hypothesis.given(T=st.integers(1, 5), K=st.integers(2, 4),
+                  seed=st.integers(0, 1000))
+def test_virtual_path_exactness_multi_direction(T, K, seed):
+    """Beyond-paper n_dirs>1: server reconstruction from [T,K] scalars
+    still replays the client trajectory exactly."""
+    from repro.core.zo import make_local_run
+
+    params = quad_params(jax.random.key(3))
+    space = random_mask(params, density=0.5, seed=seed)
+    keys = round_keys(seed, 0, T)
+    targets = jax.random.normal(jax.random.key(seed + 1), (T, 48))
+    run = make_local_run(quad_loss, space, eps=1e-3, lr=1e-2, n_dirs=K)
+    delta_client, gs = run(params, keys, {"target": targets},
+                           jnp.zeros((space.n,), jnp.float32))
+    assert gs.shape == (T, K)
+    delta_server = reconstruct_delta(space, keys, gs, 1e-2)
+    np.testing.assert_allclose(np.asarray(delta_client),
+                               np.asarray(delta_server), atol=1e-6)
+
+
+def test_multi_direction_reduces_estimator_variance():
+    """Var of the K-direction averaged estimator ~ Var/K (Lemma B.7)."""
+    from repro.core.zo import local_step
+
+    params = quad_params(jax.random.key(8))
+    batch = {"target": jnp.zeros(48)}
+    space = random_mask(params, density=0.5, seed=0)
+    grad = space.slice(jax.grad(quad_loss)(params, batch))
+
+    def est_err(key, n_dirs):
+        d0 = jnp.zeros((space.n,))
+        d1, _ = local_step(quad_loss, params, space, d0, key, 1e-4, 1.0,
+                           batch, n_dirs=n_dirs)
+        return jnp.sum((-(d1 - d0) - grad) ** 2)  # lr=1 => update = -est
+
+    keys = jax.random.split(jax.random.key(99), 300)
+    v1 = float(jnp.mean(jax.vmap(lambda k: est_err(k, 1))(keys)))
+    v4 = float(jnp.mean(jax.vmap(lambda k: est_err(k, 4))(keys)))
+    assert v4 < 0.5 * v1, (v1, v4)

@@ -1,0 +1,69 @@
+"""Data substrate tests: synthetic tasks, Dirichlet partitioning, corpus."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.data import (TaskSpec, dirichlet_partition, iid_partition,
+                        label_histogram, pretrain_batches, sample_dataset,
+                        single_label_partition, subset)
+
+
+def test_dataset_shapes_and_sep():
+    spec = TaskSpec(vocab=256, n_classes=4, seq_len=12)
+    d = sample_dataset(spec, 100, seed=0)
+    assert d["tokens"].shape == (100, 12)
+    assert d["label"].shape == (100,)
+    assert (d["tokens"][:, -1] == spec.sep_token).all()
+    assert d["label"].min() >= 0 and d["label"].max() < 4
+
+
+def test_class_conditional_distributions_differ():
+    spec = TaskSpec(vocab=256, n_classes=4, seq_len=32, noise=0.0)
+    d = sample_dataset(spec, 400, seed=1)
+    from repro.data.synthetic import _class_vocab
+    cv = _class_vocab(spec)
+    for c in range(4):
+        rows = d["tokens"][d["label"] == c][:, :-1]
+        assert np.isin(rows, cv[c]).all()
+
+
+@hypothesis.given(alpha=st.sampled_from([0.1, 0.5, 5.0]),
+                  n_clients=st.integers(2, 10))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_dirichlet_partition_disjoint_and_complete(alpha, n_clients):
+    labels = np.random.default_rng(0).integers(0, 4, size=500)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=1)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500  # disjoint + complete
+
+
+def test_dirichlet_alpha_controls_heterogeneity():
+    labels = np.random.default_rng(0).integers(0, 4, size=4000)
+    h_iid = label_histogram(labels, dirichlet_partition(labels, 8, 100.0,
+                                                        seed=2), 4)
+    h_non = label_histogram(labels, dirichlet_partition(labels, 8, 0.1,
+                                                        seed=2), 4)
+
+    def skew(h):
+        p = h / np.maximum(h.sum(1, keepdims=True), 1)
+        return float(np.mean(p.max(1)))
+
+    assert skew(h_non) > skew(h_iid) + 0.15
+
+
+def test_single_label_partition_is_pure():
+    labels = np.random.default_rng(0).integers(0, 4, size=1000)
+    parts = single_label_partition(labels, 8, seed=0)
+    for k, p in enumerate(parts):
+        assert len(set(labels[p])) == 1
+        assert labels[p][0] == k % 4
+
+
+def test_subset_and_pretrain_batches():
+    spec = TaskSpec(vocab=128, n_classes=4, seq_len=8)
+    d = sample_dataset(spec, 50, seed=0)
+    s = subset(d, np.arange(5))
+    assert s["tokens"].shape == (5, 8)
+    pb = pretrain_batches(spec, 3, 4)
+    assert len(pb) == 3 and pb[0]["tokens"].shape == (4, 8)

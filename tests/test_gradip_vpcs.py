@@ -1,0 +1,66 @@
+"""GradIP (Definition 2.3) and VPCS (Algorithm 1) unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import (DenseSpace, analyze_trajectory, gradip_trajectory,
+                        pretrain_gradient_vec, round_keys, select_clients)
+
+
+def test_gradip_matches_manual_inner_product():
+    params = {"w": jnp.zeros((32,))}
+    space = DenseSpace(params)
+    keys = round_keys(0, 0, 4)
+    gs = jnp.asarray([0.5, -1.0, 2.0, 0.0])
+    gp = jax.random.normal(jax.random.key(9), (space.n,))
+    ips, norms, coss = gradip_trajectory(space, keys, gs, gp)
+    for t in range(4):
+        z = space.sample_z(keys[t])
+        manual = float(gs[t] * jnp.dot(gp, z))
+        assert abs(float(ips[t]) - manual) < 1e-5
+    assert float(ips[3]) == 0.0 and float(norms[3]) == 0.0
+
+
+def test_pretrain_gradient_vec():
+    params = {"w": jnp.ones((8,))}
+    space = DenseSpace(params)
+    loss = lambda p, b: jnp.sum(p["w"] * b["x"])
+    batches = [{"x": jnp.ones((8,))}, {"x": 3 * jnp.ones((8,))}]
+    gp = pretrain_gradient_vec(loss, params, space, batches)
+    np.testing.assert_allclose(gp, 2.0 * np.ones(8), atol=1e-6)
+
+
+def _fl(**kw):
+    base = dict(vp_init_steps=20, vp_later_steps=20, vp_sigma=0.5,
+                vp_rho_later=5.0, vp_rho_quie=0.5)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_vpcs_flags_decaying_trajectory():
+    t = np.arange(100)
+    decaying = 10.0 * np.exp(-t / 10.0)          # extreme Non-IID signature
+    oscillating = 5.0 + np.sin(t) * 2.0          # IID signature
+    fl = _fl()
+    r_bad = analyze_trajectory(decaying, fl)
+    r_good = analyze_trajectory(oscillating, fl)
+    assert r_bad.flagged and r_bad.rho_later > fl.vp_rho_later
+    assert not r_good.flagged
+
+
+def test_vpcs_quiescence_criterion():
+    """A trajectory that collapses below sigma late in training is flagged by
+    the quiescent-step ratio even if the mean ratio is moderate."""
+    t = np.arange(100)
+    traj = np.where(t < 70, 2.0, 0.01)
+    fl = _fl(vp_rho_later=1e9)  # disable the ratio criterion
+    r = analyze_trajectory(traj, fl)
+    assert r.rho_quie == 1.0 and r.flagged
+
+
+def test_select_clients():
+    t = np.arange(100)
+    trajs = [10 * np.exp(-t / 8), 4 + np.sin(t), 8 * np.exp(-t / 12)]
+    results, flagged = select_clients(trajs, _fl())
+    assert flagged == [0, 2]

@@ -1,0 +1,77 @@
+"""Mask-selection tests (paper §2.1: sensitivity / magnitude / random)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (abstract_mask, magnitude_mask, random_mask,
+                        sensitivity_mask, sensitivity_scores)
+from repro.core.masks import _global_topk_indices
+
+
+def test_global_topk_selects_highest_scores():
+    scores = {"a": jnp.asarray([0.1, 5.0, 0.2]),
+              "b": jnp.asarray([[3.0, 0.0], [4.0, 0.05]])}
+    idx = _global_topk_indices(scores, density=3 / 7)
+    # top-3 of [0.1, 5, 0.2, 3, 0, 4, 0.05] -> a[1], b[0,0], b[1,0]
+    assert list(np.asarray(idx["a"])) == [1]
+    assert sorted(np.asarray(idx["b"]).tolist()) == [0, 2]
+
+
+def test_magnitude_mask_picks_largest_weights():
+    params = {"w": jnp.asarray([-10.0, 0.1, 3.0, -5.0])}
+    sp = magnitude_mask(params, density=0.5)
+    assert sorted(np.asarray(sp.idx_tree["w"]).tolist()) == [0, 3]
+
+
+@hypothesis.given(density=st.sampled_from([1e-3, 1e-2, 0.1, 0.5]))
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_density_respected(density):
+    params = {"w": jnp.zeros((100, 40)), "b": jnp.zeros((77,))}
+    sp = random_mask(params, density=density, seed=0, balanced=False)
+    total = 4077
+    assert sp.n == max(1, round(total * density))
+
+
+def test_sensitivity_mask_targets_sensitive_coords():
+    """Quadratic with per-coordinate curvature: sensitivity (avg grad^2) must
+    pick the high-curvature coordinates."""
+    scale = jnp.concatenate([jnp.full((10,), 10.0), jnp.full((30,), 0.1)])
+    params = {"w": jnp.ones((40,))}
+
+    def loss(p, batch):
+        return 0.5 * jnp.sum(scale * (p["w"] - batch["t"]) ** 2)
+
+    batches = [{"t": jax.random.normal(jax.random.key(i), (40,)) + 2.0}
+               for i in range(4)]
+    sp = sensitivity_mask(loss, params, batches, density=0.25)
+    chosen = set(np.asarray(sp.idx_tree["w"]).tolist())
+    assert chosen == set(range(10)), chosen
+
+
+def test_sensitivity_scores_average():
+    params = {"w": jnp.zeros((3,))}
+    loss = lambda p, b: jnp.sum(p["w"] * b["x"])
+    batches = [{"x": jnp.asarray([1.0, 0.0, 2.0])},
+               {"x": jnp.asarray([3.0, 0.0, 0.0])}]
+    sc = sensitivity_scores(loss, params, batches)
+    np.testing.assert_allclose(sc["w"], [(1 + 9) / 2, 0.0, 2.0], atol=1e-6)
+
+
+def test_abstract_mask_clamps_density():
+    ap = {"w": jax.ShapeDtypeStruct((1000, 1000), jnp.bfloat16)}
+    idx, eff = abstract_mask(ap, density=1e-3, max_coords=100)
+    assert eff <= 100 / 1e6
+    assert idx["w"].shape[0] <= 100
+    idx2, eff2 = abstract_mask(ap, density=1e-4)
+    assert eff2 == 1e-4 and idx2["w"].shape[0] == 100
+
+
+def test_balanced_random_mask_covers_every_leaf():
+    params = {"a": jnp.zeros((64, 64)), "b": jnp.zeros((4096,)),
+              "c": jnp.zeros((8, 8, 8))}
+    sp = random_mask(params, density=0.01, seed=3, balanced=True)
+    for leaf in jax.tree.leaves(sp.idx_tree):
+        assert leaf.shape[0] >= 1
+        assert len(set(np.asarray(leaf).tolist())) == leaf.shape[0]  # unique

@@ -1,0 +1,96 @@
+"""Sharding-rule invariants (no devices needed — pure spec logic)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.base import MeshConfig
+from repro.configs.shapes import get_shape
+from repro.models.init import abstract_params
+from repro.models.decode import abstract_cache
+from repro.sharding.rules import (cache_specs, fsdp_only_specs, param_specs)
+
+P = jax.sharding.PartitionSpec
+MC = MeshConfig(data=16, model=16)
+MC_POD = MeshConfig(data=16, model=16, pods=2)
+
+
+def _axes_used(spec):
+    out = []
+    for s in spec:
+        if s is None:
+            continue
+        out.extend([s] if isinstance(s, str) else list(s))
+    return out
+
+
+@pytest.mark.parametrize("mc", [MC, MC_POD], ids=["single", "multi"])
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_param_specs_divisible_and_unique(arch, mc):
+    """Every sharded dim is divisible by its axis product; no axis reused."""
+    cfg = get_config(arch)
+    ap = abstract_params(cfg)
+    specs = param_specs(cfg, ap, mc)
+    sizes = {"pod": mc.pods, "data": mc.data, "model": mc.model}
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(ap)[0],
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]):
+        used = _axes_used(spec)
+        assert len(used) == len(set(used)), (path, spec)
+        for dim, s in zip(leaf.shape, spec):
+            if s is None:
+                continue
+            n = int(np.prod([sizes[a] for a in
+                             ([s] if isinstance(s, str) else s)]))
+            assert dim % n == 0, (path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_fsdp_only_specs_divisible(arch):
+    cfg = get_config(arch)
+    ap = abstract_params(cfg)
+    specs = fsdp_only_specs(cfg, ap, MC)
+    n = MC.n_devices
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(ap)[0],
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]):
+        for dim, s in zip(leaf.shape, spec):
+            if s is not None:
+                assert dim % n == 0, (path, leaf.shape, spec)
+
+
+def test_inference_specs_skip_fsdp():
+    """train=False must not introduce batch-axis ('data') weight sharding."""
+    cfg = get_config("qwen2-7b")
+    ap = abstract_params(cfg)
+    train = param_specs(cfg, ap, MC, train=True)
+    infer = param_specs(cfg, ap, MC, train=False)
+    t_axes = set(a for s in jax.tree_util.tree_leaves(
+        train, is_leaf=lambda x: isinstance(x, P)) for a in _axes_used(s))
+    i_axes = set(a for s in jax.tree_util.tree_leaves(
+        infer, is_leaf=lambda x: isinstance(x, P)) for a in _axes_used(s))
+    assert "data" in t_axes       # ZeRO-3 second axis active for training
+    assert "data" not in i_axes   # §Perf pair 1 iteration 2
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "chatglm3-6b", "gemma2-27b",
+                                  "whisper-small"])
+def test_decode_cache_never_shards_head_dim_first(arch):
+    """§Perf pair 1: k/v cache prefers KV-heads or sequence over head_dim."""
+    cfg = get_config(arch)
+    shape = get_shape("decode_32k")
+    ac = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    specs = cache_specs(cfg, ac, shape, MC)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for path, spec in flat:
+        name = jax.tree_util.keystr(path)
+        if "'k'" in name or "'v'" in name:
+            # [n, B, W, KV, hd]: the hd slot may use 'model' only if
+            # neither KV heads nor the sequence could take it
+            if spec[4] is not None:
+                assert spec[3] is None and spec[2] is None, (name, spec)
+            # W = 32768 is divisible by 16, so hd must not be sharded here
+            assert spec[4] is None, (name, spec)

@@ -1,0 +1,172 @@
+"""End-to-end behaviour tests for the paper's system (Algorithm 2/3/1).
+
+These exercise the full FederatedZO server loop on the tiny model:
+learning progress, virtual-path/client equivalence at the server level,
+communication accounting, VP calibration + early stopping, and the
+high-frequency fl_train_step production path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.configs.tiny import TINY
+from repro.core import (Client, FederatedZO, pretrain_gradient_vec,
+                        random_mask, sensitivity_mask)
+from repro.core.fl_step import make_fl_train_step
+from repro.data.corpus import pretrain_batches
+from repro.data.partition import (dirichlet_partition, single_label_partition,
+                                  subset)
+from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset
+from repro.models import Model
+
+SPEC = TaskSpec()
+
+
+@pytest.fixture(scope="module")
+def problem():
+    model = Model(TINY)
+    params = model.init(jax.random.key(0))
+    loss, per_example, evaluate = make_task_fns(model, SPEC)
+    train = sample_dataset(SPEC, 512, seed=1)
+    ev = sample_dataset(SPEC, 256, seed=2)
+    eval_batch = {k: jnp.asarray(v) for k, v in ev.items()}
+    pre = pretrain_batches(SPEC, n_batches=4, batch_size=16)
+    return dict(model=model, params=params, loss=loss,
+                per_example=per_example, evaluate=evaluate, train=train,
+                eval_batch=eval_batch, pre=pre)
+
+
+def _clients(problem, n=4, partition="dirichlet", bs=16):
+    labels = problem["train"]["label"]
+    parts = (dirichlet_partition(labels, n, 0.5, seed=0)
+             if partition == "dirichlet"
+             else single_label_partition(labels, n, seed=0))
+    return [Client(k, subset(problem["train"], p), bs)
+            for k, p in enumerate(parts)]
+
+
+def _server(problem, space, T=1, lr=5e-2, n=4, **kw):
+    fl = FLConfig(n_clients=n, local_steps=T, lr=lr, eps=1e-3, **kw)
+    return FederatedZO(problem["loss"], problem["params"], space, fl,
+                       _clients(problem, n), eval_fn=problem["evaluate"])
+
+
+def test_meerkat_rounds_reduce_eval_loss(problem):
+    space = sensitivity_mask(
+        lambda p, b: problem["model"].loss(p, b), problem["params"],
+        problem["pre"], density=1e-2)
+    srv = _server(problem, space, T=1, lr=5e-2)
+    m0 = problem["evaluate"](problem["params"], problem["eval_batch"])
+    srv.run(60)
+    m1 = problem["evaluate"](srv.params, problem["eval_batch"])
+    assert float(m1["loss"]) < float(m0["loss"])
+    assert float(m1["acc"]) > float(m0["acc"])
+
+
+def test_params_only_change_on_masked_coords(problem):
+    """MEERKAT's updates are restricted to the static sparse subset."""
+    space = random_mask(problem["params"], density=5e-3, seed=3,
+                        balanced=False)
+    srv = _server(problem, space, T=2, lr=1e-2)
+    srv.run(2)
+    diff = jax.tree.map(lambda a, b: np.asarray(a - b), srv.params,
+                        problem["params"])
+    changed = int(sum((d != 0).sum() for d in jax.tree.leaves(diff)))
+    assert changed <= space.n  # never touches unmasked coordinates
+
+
+def test_comm_log_scalar_uploads(problem):
+    """Upload is exactly 4*T bytes per client per round (scalars only)."""
+    space = random_mask(problem["params"], density=1e-2, seed=0)
+    T, rounds, n = 3, 5, 4
+    srv = _server(problem, space, T=T)
+    srv.run(rounds)
+    assert srv.comm.up_bytes == 4 * T * rounds * n
+
+
+def test_high_freq_download_is_scalars(problem):
+    space = random_mask(problem["params"], density=1e-2, seed=0)
+    srv = _server(problem, space, T=1)  # high_freq auto-on at T=1
+    srv.run(4)
+    # down = aggregated scalar + next seed per round per client
+    assert srv.comm.down_bytes == (4 * 1 + 8) * 4 * 4
+    srv_lo = _server(problem, space, T=2)
+    srv_lo.run(1)
+    assert srv_lo.comm.down_bytes == 4 * space.n * 4  # sparse refresh
+
+
+def test_vp_calibration_flags_single_label_clients(problem):
+    """VPCS (Alg. 1) detects the single-label extreme clients."""
+    space = sensitivity_mask(
+        lambda p, b: problem["model"].loss(p, b), problem["params"],
+        problem["pre"], density=5e-2)
+    labels = problem["train"]["label"]
+    parts = (dirichlet_partition(labels, 3, 5.0, seed=0)
+             + single_label_partition(labels, 1, seed=1))
+    clients = [Client(k, subset(problem["train"], p), 32)
+               for k, p in enumerate(parts)]
+    fl = FLConfig(n_clients=4, local_steps=5, lr=5e-2, eps=1e-3,
+                  vp_calibration_steps=200, vp_init_steps=40,
+                  vp_later_steps=40, vp_sigma=0.25, vp_sigma_relative=True,
+                  vp_rho_later=3.0, vp_rho_quie=0.6)
+    srv = FederatedZO(problem["loss"], problem["params"], space, fl, clients,
+                      eval_fn=problem["evaluate"])
+    gp = pretrain_gradient_vec(lambda p, b: problem["model"].loss(p, b),
+                               problem["params"], space, problem["pre"])
+    results, flagged, trajs = srv.calibrate_vp(gp)
+    assert 3 in flagged, [r.rho_later for r in results]
+    # flagged clients run T=1 afterwards
+    srv.run_round()
+    assert srv._client_T(3) == 1 and srv._client_T(0) in (1, 5)
+
+
+def test_early_stopped_client_data_pointer_advances(problem):
+    """Paper §2.5: early-stopped clients resume from the data pointer."""
+    c = _clients(problem, n=1)[0]
+    p0 = c.ptr
+    c.next_batches(1)
+    assert c.ptr == (p0 + c.batch_size) % c.n
+
+
+def test_fl_train_step_matches_manual_t1_round(problem):
+    """The production T=1 fused step (what the dry-run lowers) computes the
+    same update as the simulation server's T=1 round."""
+    space = random_mask(problem["params"], density=1e-2, seed=5,
+                        balanced=False)
+    n_clients, bs = 4, 8
+    eps, lr = 1e-3, 1e-2
+    step = make_fl_train_step(problem["per_example"], space, eps=eps, lr=lr,
+                              n_clients=n_clients)
+    data = sample_dataset(SPEC, n_clients * bs, seed=9)
+    batch = {k: jnp.asarray(v) for k, v in data.items()}
+    key = jax.random.key(42)
+    new_params, g_clients, metrics = jax.jit(step)(problem["params"], key,
+                                                   batch)
+    # manual: per-client projected grads on the same shared z
+    z = space.sample_z(key)
+    wp = space.add(problem["params"], eps * z)
+    wm = space.add(problem["params"], -eps * z)
+    lp = problem["per_example"](wp, batch).reshape(n_clients, bs).mean(-1)
+    lm = problem["per_example"](wm, batch).reshape(n_clients, bs).mean(-1)
+    g_manual = (lp - lm) / (2 * eps)
+    np.testing.assert_allclose(np.asarray(g_clients), np.asarray(g_manual),
+                               rtol=1e-3, atol=1e-5)
+    want = space.add(problem["params"], -lr * float(g_manual.mean()) * z)
+    got_flat = space.slice(new_params)
+    want_flat = space.slice(want)
+    np.testing.assert_allclose(np.asarray(got_flat), np.asarray(want_flat),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_seed_reuse_across_methods_is_identical(problem):
+    """Same seed => identical client batches and perturbations => two servers
+    with the same space produce bit-identical global models."""
+    space = random_mask(problem["params"], density=1e-2, seed=0)
+    a = _server(problem, space, T=2, lr=1e-2, seed=7)
+    b = _server(problem, space, T=2, lr=1e-2, seed=7)
+    a.run(2)
+    b.run(2)
+    for la, lb in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
