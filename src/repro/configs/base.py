@@ -214,6 +214,9 @@ class FLConfig:
     mask_kind: str = "sensitivity"  # sensitivity | magnitude | random | dense | lora
     seed: int = 0
     batch_size: int = 16
+    # ZO hot-path execution route (core/dispatch.py): "auto" uses the fused
+    # flat Pallas kernels when the layout supports it, else the pytree route.
+    zo_backend: str = "auto"  # auto | pallas | ref
     # MEERKAT-VP (Alg. 1) knobs — defaults follow Appendix C.1 Table 4
     vp_calibration_steps: int = 100
     vp_init_steps: int = 20

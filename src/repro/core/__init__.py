@@ -1,5 +1,6 @@
 """MEERKAT core: the paper's contribution as composable JAX modules."""
 from repro.core.spaces import DenseSpace, LoRASpace, MaskedSpace
+from repro.core.dispatch import FlatBacking, get_backing, resolve_backend
 from repro.core.masks import (abstract_mask, concrete_balanced_mask_like,
                               magnitude_mask, random_mask, sensitivity_mask,
                               sensitivity_scores)

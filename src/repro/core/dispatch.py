@@ -1,0 +1,246 @@
+"""Kernel-dispatch layer: flat-vector backing for the sparse-ZO hot path.
+
+The MEERKAT inner loop perturbs and updates the parameter vector at every
+step.  Written over pytrees (``space.add``), each phase is a chain of
+per-leaf scatters — three full HBM round-trips per step.  The fused Pallas
+kernels (``kernels/zo_update.py``) do each phase in a single pass, but they
+operate on flat ``[N]`` vectors in the (R, 128) tile layout.
+
+:class:`FlatBacking` bridges the two worlds for a (space, param-template)
+pair.  It caches the static layout (leaf shapes / dtypes / offsets) plus the
+dense 0/1 mask and the int32 global scatter indices that map the space's
+``[n]`` sparse value vectors into the flat ``[N]`` coordinate system:
+
+* ``flatten(params)``   pytree -> ``[N]`` (leaf-concatenation order)
+* ``unflatten(flat)``   ``[N]`` -> pytree (casts back to each leaf dtype)
+* ``expand(vec)``       ``[n]`` sparse values -> dense ``[N]`` f32
+* ``restrict(flat)``    dense ``[N]`` -> ``[n]`` values at the space coords
+
+Backend selection (``resolve_backend``):
+
+* ``"pallas"`` — flat route through ``zo_dual_perturb_flat`` /
+  ``zo_fused_update_flat``.  On TPU the kernels run compiled; on CPU (tests,
+  simulations) they run in interpret mode (``kernels/ops.py`` flips
+  automatically).
+* ``"ref"``    — the original pytree ``space.add`` route (the reference
+  semantics, and the only correct choice on the sharded production mesh:
+  a flat reshape of a tensor-parallel weight is not representable for
+  GSPMD, so the flat route would all-gather every weight — DESIGN.md §perf).
+* ``"auto"``   — pallas when the layout supports it (uniform leaf dtype,
+  N < 2**31 so int32 indices are exact, non-empty space) and the step is
+  not sharding-constrained; ref otherwise.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.zo_update import LANE, SUB
+
+_INT32_MAX = 2**31 - 1
+_TILE = SUB * LANE  # (8, 128) sublane tile quantum of the fused kernels
+BACKENDS = ("auto", "pallas", "ref")
+
+
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+class FlatBacking:
+    """Flat [N] view of a space over a parameter template (see module doc)."""
+
+    def __init__(self, space, template):
+        self.space = space
+        leaves, self.treedef = jax.tree_util.tree_flatten(template)
+        if not leaves:
+            raise ValueError("empty parameter template")
+        self.shapes = [tuple(l.shape) for l in leaves]
+        self.dtypes = [jnp.dtype(l.dtype) for l in leaves]
+        self.sizes = [int(np.prod(s)) if s else 1 for s in self.shapes]
+        self.offsets = np.concatenate([[0], np.cumsum(self.sizes)]).astype(
+            np.int64)
+        self.n_flat = int(self.offsets[-1])
+        # flat vectors are carried at the kernel tile quantum so the (R, 128)
+        # reshape inside ops.py never has to pad-copy any operand
+        self.n_pad = -(-self.n_flat // _TILE) * _TILE
+        self.dtype = self.dtypes[0] if len(set(self.dtypes)) == 1 else None
+        # identity: the space covers every coordinate *in storage order*
+        # (DenseSpace; or a mask selecting everything) — skip the scatter.
+        # Spaces that guarantee this structurally say so (identity_layout),
+        # costing nothing.  A merely full-coverage mask is verified against
+        # arange — the index contract allows any per-leaf order, and a
+        # permuted full mask must take the scatter path.
+        self.identity = bool(getattr(space, "identity_layout",
+                                     lambda: False)()
+                             and space.n == self.n_flat)
+        self._idx_leaves = None
+        self._idx_concrete = True
+        if not self.identity:
+            idx_leaves = space.leaf_index_arrays(template)
+            concrete = not any(_is_tracer(i) for i in idx_leaves)
+            if space.n == self.n_flat and concrete:
+                self.identity = all(
+                    np.array_equal(np.asarray(i), np.arange(s))
+                    for i, s in zip(idx_leaves, self.sizes))
+            if not self.identity:
+                self._idx_leaves = idx_leaves
+                self._idx_concrete = concrete
+        self._global_index = None
+        self._mask = None
+
+    @property
+    def global_index(self):
+        """[n] int32 flat positions of the space coords (None if identity).
+
+        Built lazily — the ref backend and huge layouts never pay for it.
+        Concrete index trees build in numpy and cache (jnp constructors
+        inside a jit trace yield tracers, which must never end up in the
+        per-space cache); traced trees (dry-run) rebuild in-graph per use."""
+        if self.identity:
+            return None
+        if self.n_flat > _INT32_MAX:
+            raise ValueError(
+                f"flat layout of {self.n_flat} coords exceeds int32 indexing;"
+                " use backend='ref'")
+        if self._global_index is not None:
+            return self._global_index
+        if self._idx_concrete:
+            gidx = np.concatenate(
+                [np.asarray(i, np.int64) + off
+                 for i, off in zip(self._idx_leaves, self.offsets[:-1])])
+            self._global_index = gidx.astype(np.int32)
+            return self._global_index
+        return jnp.concatenate(  # traced: per-use, uncached
+            [jnp.asarray(i, jnp.int32) + jnp.int32(off)
+             for i, off in zip(self._idx_leaves, self.offsets[:-1])])
+
+    @property
+    def mask(self):
+        """Dense [n_pad] f32 0/1 mask (diagnostics / 3-operand kernels).
+
+        The hot paths run the pre-masked kernel variants and never read it;
+        built lazily like :attr:`global_index`."""
+        if self._mask is not None:
+            return self._mask
+        if self.identity:
+            mask = np.zeros((self.n_pad,), np.float32)
+            mask[:self.n_flat] = 1.0
+            self._mask = mask
+            return mask
+        gidx = self.global_index
+        if self._idx_concrete:
+            mask = np.zeros((self.n_pad,), np.float32)
+            mask[gidx] = 1.0
+            self._mask = mask
+            return mask
+        return jnp.zeros((self.n_pad,), jnp.float32).at[gidx].set(1.0)
+
+    @property
+    def supported(self) -> bool:
+        """Whether the flat kernel route is usable for this layout."""
+        return (self.dtype is not None and self.n_flat <= _INT32_MAX
+                and self.space.n > 0)
+
+    @property
+    def cacheable(self) -> bool:
+        return self._idx_concrete
+
+    def flatten(self, params):
+        """Concatenate raveled leaves -> [n_pad] (uniform dtype, or f32).
+
+        The tail beyond ``n_flat`` is zeros; every kernel operand therefore
+        arrives already in the (R, 128)-tileable length."""
+        leaves = jax.tree_util.tree_leaves(params)
+        dt = self.dtype or jnp.float32
+        segs = [l.reshape(-1).astype(dt) for l in leaves]
+        if self.n_pad > self.n_flat:
+            segs.append(jnp.zeros((self.n_pad - self.n_flat,), dt))
+        return jnp.concatenate(segs)
+
+    def unflatten(self, flat):
+        """Split a flat [n_pad] (or [N]) vector back into the pytree."""
+        out = [flat[int(o):int(o) + s].reshape(sh).astype(dt)
+               for o, s, sh, dt in zip(self.offsets[:-1], self.sizes,
+                                       self.shapes, self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def expand(self, vec):
+        """Sparse [n] values -> dense [n_pad] f32 (zeros elsewhere)."""
+        if self.identity:
+            v = vec.astype(jnp.float32)
+            if self.n_pad > self.n_flat:
+                v = jnp.concatenate([v, jnp.zeros((self.n_pad - self.n_flat,),
+                                                  jnp.float32)])
+            return v
+        return jnp.zeros((self.n_pad,), jnp.float32).at[
+            self.global_index].set(vec.astype(jnp.float32))
+
+    def restrict(self, flat):
+        """Dense [n_pad] (or [N]) -> the [n] values at the space coords."""
+        if self.identity:
+            return flat[:self.n_flat].astype(jnp.float32)
+        return flat[self.global_index].astype(jnp.float32)
+
+
+def _layout_key(template):
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    return (treedef, tuple((tuple(l.shape), str(jnp.dtype(l.dtype)))
+                           for l in leaves))
+
+
+def get_backing(space, template) -> FlatBacking:
+    """FlatBacking for (space, template), cached on the space instance.
+
+    The cached arrays (mask, global indices) derive only from the space's
+    index tree and the template's *shapes* — never from parameter values —
+    so the cache is safe to reuse across jit traces.  When the index tree
+    itself is traced (the dry-run's abstract masks) nothing is cached.
+    """
+    key = _layout_key(template)
+    cached = getattr(space, "_flat_backing", None)
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    backing = FlatBacking(space, template)
+    if backing.cacheable:
+        space._flat_backing = (key, backing)
+    return backing
+
+
+# auto stays on the pytree route when the flat path would materialize more
+# dense state than this, *summed over vmapped clients* (the T>1 loops scan
+# a dense [n_pad] f32 delta per client, T=1 steps hold a handful of dense
+# transients; ref touches only sparse [n] vectors and in-place scatters).
+# The budget is platform-scaled: CPU simulations get 256 MiB, a real TPU
+# (where the flat route is the point) gets 8 GiB of HBM headroom.
+# Explicit backend="pallas" always overrides.
+DENSE_CARRY_AUTO_BYTES = 256 * 1024 * 1024
+DENSE_CARRY_AUTO_BYTES_TPU = 8 * 1024 * 1024 * 1024
+
+
+def _carry_budget() -> int:
+    return (DENSE_CARRY_AUTO_BYTES_TPU
+            if jax.default_backend() == "tpu" else DENSE_CARRY_AUTO_BYTES)
+
+
+def resolve_backend(backend: Optional[str], backing: FlatBacking, *,
+                    sharded: bool = False, dense_carry: int = 1) -> str:
+    """Map a requested backend ('auto'/None included) to 'pallas' | 'ref'.
+
+    ``dense_carry`` is the number of concurrent dense [n_pad] f32 state
+    vectors the pallas route implies — one per vmapped client in
+    make_local_run / make_fl_round_step, one for a single T=1 step.  Auto
+    requires their total to fit the platform carry budget so huge
+    unsharded models don't trade sparse [n] traffic for an OOM."""
+    backend = backend or "auto"
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        if sharded or not backing.supported:
+            return "ref"
+        if 4 * backing.n_pad * max(1, dense_carry) > _carry_budget():
+            return "ref"
+        return "pallas"
+    return backend

@@ -13,37 +13,64 @@ high-frequency (T=1) MEERKAT step is exactly:
 The only cross-client collective is the scalar mean — the paper's 1000x
 communication saving, visible structurally in the lowered HLO.
 
+Both step factories dispatch between the fused flat-vector Pallas route and
+the pytree reference route (``core/dispatch.py``).  On the flat route the
+perturb phase is one ``zo_dual_perturb_flat`` HBM pass producing both
+perturbed copies and the weight update one ``zo_fused_update_flat`` pass —
+versus three chained full-tree scatter passes on the reference route.
+
 ``make_fl_round_step`` is the T>1 variant (clients' deltas diverge within a
 round, so clients are vmapped; used by simulations and small-scale runs).
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.dispatch import get_backing, resolve_backend
+from repro.kernels.ops import zo_dual_perturb_flat, zo_fused_update_flat
+
 
 def make_fl_train_step(per_example_loss: Callable, space, *, eps: float,
-                       lr: float, n_clients: int, constrain_params=None):
+                       lr: float, n_clients: int, constrain_params=None,
+                       backend: Optional[str] = None):
     """T=1 high-frequency MEERKAT step (Alg. 3). Returns jittable fn
     (params, key, batch) -> (params', g_clients [K], metrics).
 
     ``constrain_params`` re-applies the parameter sharding after each sparse
     scatter — the flat-index scatter otherwise erases GSPMD's weight
-    shardings and replicates all downstream matmuls (see DESIGN.md §perf)."""
+    shardings and replicates all downstream matmuls (see DESIGN.md §perf).
+    When it is set, backend="auto" resolves to the pytree route: flattening
+    a tensor-parallel weight is not GSPMD-representable, so the fused flat
+    kernels are reserved for the unsharded / FSDP-only regimes."""
     cp = constrain_params or (lambda p: p)
 
     def step(params, key, batch):
+        backing = get_backing(space, params)
+        be = resolve_backend(backend, backing,
+                             sharded=constrain_params is not None)
         z = space.sample_z(key)
-        w_plus = cp(space.add(params, eps * z))
-        l_plus = per_example_loss(w_plus, batch)          # [B_global]
-        w_minus = cp(space.add(w_plus, (-2.0 * eps) * z))  # in-place chain
-        l_minus = per_example_loss(w_minus, batch)
+        if be == "ref":
+            w_plus = cp(space.add(params, eps * z))
+            l_plus = per_example_loss(w_plus, batch)          # [B_global]
+            w_minus = cp(space.add(w_plus, (-2.0 * eps) * z))  # in-place chain
+            l_minus = per_example_loss(w_minus, batch)
+        else:
+            w_flat = backing.flatten(params)
+            z_flat = backing.expand(z)
+            wp, wm = zo_dual_perturb_flat(w_flat, z_flat, None, eps)
+            l_plus = per_example_loss(cp(backing.unflatten(wp)), batch)
+            l_minus = per_example_loss(cp(backing.unflatten(wm)), batch)
         g_clients = (l_plus - l_minus).reshape(n_clients, -1).mean(-1) \
             / (2.0 * eps)
         g = jnp.mean(g_clients)                           # scalar collective
-        new_params = cp(space.add(w_minus, (eps - lr * g) * z))
+        if be == "ref":
+            new_params = cp(space.add(w_minus, (eps - lr * g) * z))
+        else:
+            new_params = cp(backing.unflatten(zo_fused_update_flat(
+                w_flat, z_flat, None, -lr * g)))
         metrics = {"loss": jnp.mean(l_plus + l_minus) / 2.0, "g": g}
         return new_params, g_clients, metrics
 
@@ -51,13 +78,17 @@ def make_fl_train_step(per_example_loss: Callable, space, *, eps: float,
 
 
 def make_fl_round_step(loss_fn: Callable, space, *, eps: float, lr: float,
-                       T: int):
+                       T: int, backend: Optional[str] = None):
     """Full MEERKAT round with T>1 local steps and vmapped clients.
 
     batches: pytree with leading [K, T, b, ...]; keys: [T] (shared across
-    clients per Alg. 2).  Returns (params', gs [K, T])."""
+    clients per Alg. 2).  Returns (params', gs [K, T]).
 
-    def client_run(params, keys, batches_c):
+    Flat route: the parameter vector is flattened once per round; each
+    vmapped client carries its dense flat delta through the T-step scan with
+    one fused dual-perturb + one fused update pass per step."""
+
+    def client_run_ref(params, keys, batches_c):
         def one(delta, inp):
             key, b = inp
             z = space.sample_z(key)
@@ -70,8 +101,31 @@ def make_fl_round_step(loss_fn: Callable, space, *, eps: float, lr: float,
         return jax.lax.scan(one, delta0, (keys, batches_c))
 
     def round_step(params, keys, batches):
-        deltas, gs = jax.vmap(client_run, in_axes=(None, None, 0))(
-            params, keys, batches)
+        backing = get_backing(space, params)
+        n_cl = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        if resolve_backend(backend, backing, dense_carry=n_cl) == "ref":
+            deltas, gs = jax.vmap(client_run_ref, in_axes=(None, None, 0))(
+                params, keys, batches)
+        else:
+            w_flat = backing.flatten(params)
+
+            def client_run(batches_c):
+                def one(delta_dense, inp):
+                    key, b = inp
+                    z_flat = backing.expand(space.sample_z(key))
+                    wp, wm = zo_dual_perturb_flat(w_flat + delta_dense,
+                                                  z_flat, None, eps)
+                    lp = loss_fn(backing.unflatten(wp), b)
+                    lm = loss_fn(backing.unflatten(wm), b)
+                    g = (lp - lm) / (2.0 * eps)
+                    return zo_fused_update_flat(delta_dense, z_flat, None,
+                                                -lr * g), g
+
+                d0 = jnp.zeros((backing.n_pad,), jnp.float32)
+                d_T, gs = jax.lax.scan(one, d0, (keys, batches_c))
+                return backing.restrict(d_T), gs
+
+            deltas, gs = jax.vmap(client_run)(batches)
         agg = jnp.mean(deltas, axis=0)                    # [n] sparse collective
         return space.add(params, agg), gs
 

@@ -59,7 +59,11 @@ class CommLog:
 
 class FederatedZO:
     """Generic sparse-ZO FL server; the ``space`` argument selects the method
-    (MEERKAT sensitivity mask / magnitude / random / dense / LoRA)."""
+    (MEERKAT sensitivity mask / magnitude / random / dense / LoRA).
+
+    The vmapped client loops dispatch through ``fl.zo_backend``
+    ("auto" routes the per-step perturb/update through the fused flat
+    Pallas kernels when the layout supports it; see core/dispatch.py)."""
 
     def __init__(self, loss_fn: Callable, params, space, fl: FLConfig,
                  clients: Sequence[Client], eval_fn: Optional[Callable] = None,
@@ -68,6 +72,7 @@ class FederatedZO:
         self.params = params
         self.space = space
         self.fl = fl
+        self.backend = getattr(fl, "zo_backend", "auto")
         self.clients = list(clients)
         self.eval_fn = eval_fn
         self.high_freq = fl.local_steps == 1 if high_freq is None else high_freq
@@ -83,18 +88,23 @@ class FederatedZO:
                 lambda g: VP.reconstruct_delta(self.space, keys, g,
                                                self.fl.lr))(gs))
 
-    # -- jitted vmapped T-step client group (one compile per distinct T) ----
-    def _batch_run_for(self, T: int):
-        if T not in self._batch_runs:
+    # -- jitted vmapped T-step client group (one compile per distinct
+    # (T, group width); the width feeds the auto backend's dense-carry
+    # budget, so a small early-stopped group isn't penalized for the
+    # fleet size) ------------------------------------------------------
+    def _batch_run_for(self, T: int, n_group: int):
+        key = (T, n_group)
+        if key not in self._batch_runs:
             run = ZO.make_local_run(self.loss_fn, self.space, self.fl.eps,
-                                    self.fl.lr)
+                                    self.fl.lr, backend=self.backend,
+                                    n_carries=n_group)
 
             def group(params, keys, batches):
                 zeros = jnp.zeros((self.space.n,), jnp.float32)
                 return jax.vmap(lambda b: run(params, keys, b, zeros))(batches)
 
-            self._batch_runs[T] = jax.jit(group)
-        return self._batch_runs[T]
+            self._batch_runs[key] = jax.jit(group)
+        return self._batch_runs[key]
 
     def _client_T(self, cid: int) -> int:
         return 1 if cid in self.early_stopped else self.fl.local_steps
@@ -115,7 +125,8 @@ class FederatedZO:
             keys = S.round_keys(self.fl.seed, r, T)
             batches = self._stack([c.next_batches(T) for c in cs])
             # (1) clients run T local ZO steps; upload the scalars g_k^{1..T}
-            _, gs = self._batch_run_for(T)(self.params, keys, batches)
+            _, gs = self._batch_run_for(T, len(cs))(self.params, keys,
+                                                     batches)
             # (2) server reconstructs each client's virtual path from
             #     (seed list, scalars) — no data, no dense vectors.
             deltas.append(self._recon(keys, gs))
@@ -150,7 +161,8 @@ class FederatedZO:
         T = T_cali or self.fl.vp_calibration_steps
         keys = S.round_keys(self.fl.seed, -1, T)
         batches = self._stack([c.next_batches(T) for c in self.clients])
-        _, gs = self._batch_run_for(T)(self.params, keys, batches)
+        _, gs = self._batch_run_for(T, len(self.clients))(self.params,
+                                                           keys, batches)
         trajs = []
         for c, g in zip(self.clients, np.asarray(gs)):
             ips, _, _ = gradip_trajectory(self.space, keys, jnp.asarray(g),

@@ -5,25 +5,79 @@ grad_hat = g * (z (.) m)
 
 We sample z only at the masked coordinates (space semantics), which is
 mathematically identical to the dense ``z (.) m`` formulation.
+
+Every entry point dispatches between two execution routes (see
+``core/dispatch.py``):
+
+* ``backend="pallas"`` — the hot path.  Parameters live as one flat [N]
+  vector; each perturb phase is a single fused
+  :func:`repro.kernels.ops.zo_dual_perturb_flat` pass (one HBM read of
+  (w, z, m) producing both perturbed copies) and each update a single
+  :func:`repro.kernels.ops.zo_fused_update_flat` pass, instead of chained
+  per-leaf pytree scatters.
+* ``backend="ref"``    — the original ``space.add`` pytree route (reference
+  semantics; required for sharded weights and odd layouts).
+* ``backend=None``/"auto" picks pallas whenever the flat layout supports it.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.dispatch import get_backing, resolve_backend
+from repro.kernels.ops import zo_dual_perturb_flat, zo_fused_update_flat
+
+
+def _dual_losses(loss_fn, backing, base_flat, z_flat, eps, batch):
+    """Fused perturb + the two loss evaluations; returns (l+, l-).
+
+    z_flat comes pre-masked from ``backing.expand`` (zero off the space
+    coordinates), so the kernels run without the mask operand stream."""
+    w_plus, w_minus = zo_dual_perturb_flat(base_flat, z_flat, None, eps)
+    return (loss_fn(backing.unflatten(w_plus), batch),
+            loss_fn(backing.unflatten(w_minus), batch))
+
+
+def _multi_dir_update(loss_fn, backing, space, base_flat, key, eps: float,
+                      n_dirs: int, batch):
+    """K-direction fused estimator at ``base_flat``: splits the step key
+    into K direction keys (matching ``reconstruct_delta``'s [T, K] replay)
+    and returns (mean_k g_k * z_k as a dense flat vector, gs [K]).
+
+    Scanned with a running sum so peak dense memory stays one [n_pad]
+    accumulator (not [K, n_pad]) and the loss graph compiles once."""
+
+    def one(acc, k):
+        z_flat = backing.expand(space.sample_z(k))
+        lp, lm = _dual_losses(loss_fn, backing, base_flat, z_flat, eps,
+                              batch)
+        g = (lp - lm) / (2.0 * eps)
+        return acc + g * z_flat, g
+
+    upd_sum, gs = jax.lax.scan(one, jnp.zeros((backing.n_pad,), jnp.float32),
+                               jax.random.split(key, n_dirs))
+    return upd_sum / n_dirs, gs
+
 
 def projected_gradient(loss_fn: Callable, params, space, delta, z, eps: float,
-                       batch):
+                       batch, backend: Optional[str] = None):
     """Scalar projected gradient g at (params + delta) along z."""
-    lp = loss_fn(space.add(params, delta + eps * z), batch)
-    lm = loss_fn(space.add(params, delta - eps * z), batch)
+    backing = get_backing(space, params)
+    if resolve_backend(backend, backing) == "ref":
+        lp = loss_fn(space.add(params, delta + eps * z), batch)
+        lm = loss_fn(space.add(params, delta - eps * z), batch)
+        return (lp - lm) / (2.0 * eps)
+    base = backing.flatten(params) + backing.expand(delta)
+    lp, lm = _dual_losses(loss_fn, backing, base, backing.expand(z), eps,
+                          batch)
     return (lp - lm) / (2.0 * eps)
 
 
 def local_step(loss_fn: Callable, params, space, delta, key, eps: float,
-               lr: float, batch, n_dirs: int = 1):
+               lr: float, batch, n_dirs: int = 1,
+               backend: Optional[str] = None):
     """One client-side ZO step on the sparse delta. Returns (delta', g).
 
     ``n_dirs > 1`` (beyond-paper) averages the estimator over K independent
@@ -32,14 +86,36 @@ def local_step(loss_fn: Callable, params, space, delta, key, eps: float,
     step; the virtual path stays reconstructible because the K direction
     keys derive from the shared step key (``reconstruct_delta`` accepts
     gs of shape [T, K]).  n_dirs=1 is exactly the paper's Eq. 1 step."""
+    backing = get_backing(space, params)
+    if resolve_backend(backend, backing) == "ref":
+        return _local_step_ref(loss_fn, params, space, delta, key, eps, lr,
+                               batch, n_dirs)
+
+    base = backing.flatten(params) + backing.expand(delta)
     if n_dirs == 1:
         z = space.sample_z(key)
-        g = projected_gradient(loss_fn, params, space, delta, z, eps, batch)
+        lp, lm = _dual_losses(loss_fn, backing, base, backing.expand(z), eps,
+                              batch)
+        g = (lp - lm) / (2.0 * eps)
+        return delta - lr * g * z, g
+
+    upd, gs = _multi_dir_update(loss_fn, backing, space, base, key, eps,
+                                n_dirs, batch)
+    return delta - lr * backing.restrict(upd), gs
+
+
+def _local_step_ref(loss_fn, params, space, delta, key, eps, lr, batch,
+                    n_dirs):
+    if n_dirs == 1:
+        z = space.sample_z(key)
+        g = projected_gradient(loss_fn, params, space, delta, z, eps, batch,
+                               backend="ref")
         return delta - lr * g * z, g
 
     def one(k):
         z = space.sample_z(k)
-        g = projected_gradient(loss_fn, params, space, delta, z, eps, batch)
+        g = projected_gradient(loss_fn, params, space, delta, z, eps, batch,
+                               backend="ref")
         return g * z, g
 
     keys = jax.random.split(key, n_dirs)
@@ -48,21 +124,50 @@ def local_step(loss_fn: Callable, params, space, delta, key, eps: float,
 
 
 def make_local_run(loss_fn: Callable, space, eps: float, lr: float,
-                   n_dirs: int = 1):
+                   n_dirs: int = 1, backend: Optional[str] = None,
+                   n_carries: int = 1):
     """Jittable T-step client loop.
 
     batches: pytree with leading [T, ...]; keys: [T] PRNG keys.
-    Returns (delta_T [n], gs [T]).
-    """
+    Returns (delta_T [n], gs [T]) (gs: [T, K] when n_dirs > 1).
+    ``n_carries``: how many copies of this run will be vmapped at once
+    (clients) — the auto backend budgets its dense flat carries by it.
+
+    On the pallas backend the flat parameter vector is built ONCE outside
+    the scan and the scan carries the *dense* flat delta, so every local
+    step is exactly one fused dual-perturb pass plus one fused update pass
+    over HBM — no per-step pytree scatter chain."""
 
     def run(params, keys, batches, delta0):
-        def step(delta, inp):
-            key, batch = inp
-            delta, g = local_step(loss_fn, params, space, delta, key, eps, lr,
-                                  batch, n_dirs=n_dirs)
-            return delta, g
+        backing = get_backing(space, params)
+        if resolve_backend(backend, backing,
+                           dense_carry=max(1, n_carries)) == "ref":
+            def step(delta, inp):
+                key, batch = inp
+                delta, g = _local_step_ref(loss_fn, params, space, delta,
+                                           key, eps, lr, batch, n_dirs)
+                return delta, g
 
-        delta_T, gs = jax.lax.scan(step, delta0, (keys, batches))
-        return delta_T, gs
+            return jax.lax.scan(step, delta0, (keys, batches))
+
+        w_flat = backing.flatten(params)
+
+        def step(delta_dense, inp):
+            key, batch = inp
+            base = w_flat + delta_dense
+            if n_dirs == 1:
+                z_flat = backing.expand(space.sample_z(key))
+                lp, lm = _dual_losses(loss_fn, backing, base, z_flat, eps,
+                                      batch)
+                g = (lp - lm) / (2.0 * eps)
+                return zo_fused_update_flat(delta_dense, z_flat, None,
+                                            -lr * g), g
+            upd, gs = _multi_dir_update(loss_fn, backing, space, base, key,
+                                        eps, n_dirs, batch)
+            return zo_fused_update_flat(delta_dense, upd, None, -lr), gs
+
+        delta_T, gs = jax.lax.scan(step, backing.expand(delta0),
+                                   (keys, batches))
+        return backing.restrict(delta_T), gs
 
     return run

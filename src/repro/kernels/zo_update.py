@@ -31,19 +31,40 @@ def _dual_perturb_kernel(w_ref, z_ref, m_ref, eps_ref, plus_ref, minus_ref):
     minus_ref[...] = w - pert
 
 
+def _dual_perturb_premasked_kernel(w_ref, z_ref, eps_ref, plus_ref,
+                                   minus_ref):
+    w = w_ref[...]
+    pert = (eps_ref[0] * z_ref[...]).astype(w.dtype)
+    plus_ref[...] = w + pert
+    minus_ref[...] = w - pert
+
+
 def dual_perturb(w, z, m, eps, *, block_r: int = BLOCK_R,
                  interpret: bool = True):
-    """w, z, m: [R, 128] -> (w + eps*z*m, w - eps*z*m)."""
+    """w, z, m: [R, 128] -> (w + eps*z*m, w - eps*z*m).
+
+    ``m=None`` selects the pre-masked variant: z is already zero off the
+    sparse coordinates (the dispatch layer's ``expand`` scatters it that
+    way), so the mask operand — a third full HBM stream — is dropped."""
     R, C = w.shape
     assert C == LANE and R % block_r == 0, (w.shape, block_r)
     grid = (R // block_r,)
     spec = pl.BlockSpec((block_r, LANE), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
     eps_arr = jnp.full((1,), eps, jnp.float32)
+    if m is None:
+        return pl.pallas_call(
+            _dual_perturb_premasked_kernel,
+            grid=grid,
+            in_specs=[spec, spec, scalar_spec],
+            out_specs=[spec, spec],
+            out_shape=[jax.ShapeDtypeStruct(w.shape, w.dtype)] * 2,
+            interpret=interpret,
+        )(w, z, eps_arr)
     return pl.pallas_call(
         _dual_perturb_kernel,
         grid=grid,
-        in_specs=[spec, spec, spec,
-                  pl.BlockSpec((1,), lambda i: (0,))],
+        in_specs=[spec, spec, spec, scalar_spec],
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct(w.shape, w.dtype)] * 2,
         interpret=interpret,
@@ -55,18 +76,34 @@ def _fused_update_kernel(w_ref, z_ref, m_ref, s_ref, out_ref):
                                  * m_ref[...]).astype(w_ref.dtype)
 
 
+def _fused_update_premasked_kernel(w_ref, z_ref, s_ref, out_ref):
+    out_ref[...] = w_ref[...] + (s_ref[0] * z_ref[...]).astype(w_ref.dtype)
+
+
 def fused_update(w, z, m, scale, *, block_r: int = BLOCK_R,
                  interpret: bool = True):
-    """w' = w + scale * z * m   (scale = -lr * g for the MEERKAT update)."""
+    """w' = w + scale * z * m   (scale = -lr * g for the MEERKAT update).
+
+    ``m=None``: pre-masked z (see :func:`dual_perturb`)."""
     R, C = w.shape
     assert C == LANE and R % block_r == 0, (w.shape, block_r)
     grid = (R // block_r,)
     spec = pl.BlockSpec((block_r, LANE), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
     s_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+    if m is None:
+        return pl.pallas_call(
+            _fused_update_premasked_kernel,
+            grid=grid,
+            in_specs=[spec, spec, scalar_spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+            interpret=interpret,
+        )(w, z, s_arr)
     return pl.pallas_call(
         _fused_update_kernel,
         grid=grid,
-        in_specs=[spec, spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        in_specs=[spec, spec, spec, scalar_spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
         interpret=interpret,

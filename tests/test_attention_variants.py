@@ -4,7 +4,9 @@ gqa_attention (repeat-KV oracle) == blocked_gqa_attention (q-chunked)
 == online_gqa_attention (flash-style online softmax, §Perf pair 2)
 == grouped_gqa_attention (decode path, §Perf pair 1).
 """
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

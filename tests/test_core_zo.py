@@ -1,6 +1,8 @@
 """Properties of the sparse-ZO machinery: estimator correctness, virtual-path
 exactness (hypothesis), seed determinism, space algebra."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

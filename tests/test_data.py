@@ -1,5 +1,7 @@
 """Data substrate tests: synthetic tasks, Dirichlet partitioning, corpus."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import numpy as np
 

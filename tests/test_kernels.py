@@ -43,6 +43,28 @@ def test_fused_update_sweep(n, dtype):
                                np.asarray(ru, np.float32), atol=tol)
 
 
+@pytest.mark.parametrize("kernel", ["dual_perturb", "fused_update"])
+def test_zo_kernels_multiblock_grid(kernel):
+    """Pin block_r so interpret mode runs a real multi-step grid (the
+    default collapses CPU runs to one grid step; this keeps the BlockSpec
+    index-map path covered off-TPU)."""
+    n = 8192  # R = 64 rows -> grid=(8,) at block_r=8
+    key = jax.random.key(n)
+    w = jax.random.normal(key, (n,))
+    z = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    m = (jax.random.uniform(jax.random.fold_in(key, 2), (n,)) < 0.3
+         ).astype(jnp.float32)
+    if kernel == "dual_perturb":
+        p, mi = ops.zo_dual_perturb_flat(w, z, m, 1e-3, block_r=8)
+        rp, rm = ref.dual_perturb_ref(w, z, m, 1e-3)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(rp), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(mi), np.asarray(rm), atol=1e-6)
+    else:
+        u = ops.zo_fused_update_flat(w, z * m, None, -0.05, block_r=8)
+        ru = ref.fused_update_ref(w, z, m, -0.05)
+        np.testing.assert_allclose(np.asarray(u), np.asarray(ru), atol=1e-6)
+
+
 @pytest.mark.parametrize("n", SIZES)
 def test_gradip_sweep(n):
     key = jax.random.key(n + 13)

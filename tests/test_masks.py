@@ -1,5 +1,7 @@
 """Mask-selection tests (paper §2.1: sensitivity / magnitude / random)."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
