@@ -1,0 +1,143 @@
+"""Serving benchmark: naive flush batching vs continuous batching.
+
+Identical request streams (mixed prompt lengths, mixed generation budgets)
+through both engines on the tiny CPU config and the qwen3-4b reduced()
+variant (DESIGN.md §7 scale substitution).  Both engines are warmed with
+one full wave first, so the timed wave measures steady-state serving —
+which for the continuous engine must involve zero re-compiles (asserted
+here and in tests/test_continuous_batching.py).
+
+Metrics per engine: wall-clock tok/s over generated tokens and mean
+time-to-first-token.  Naive TTFT is per *chunk*: a request's first token
+exists only when its whole padded batch finishes its fixed-length decode
+scan; continuous TTFT comes from the engine's per-request timestamps.
+
+Writes runs/bench/BENCH_serve.json.  CPU wall times validate the *schedule*
+(fewer wasted slot-steps, no retraces), not TPU performance.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.configs import get_config
+from repro.configs.tiny import TINY
+from repro.models import Model
+from repro.serving.engine import (ContinuousBatchingEngine, ServeEngine,
+                                  generate)
+
+
+def _workload(cfg, n_requests: int, seed: int):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(4, 24))).astype(np.int32)
+               for _ in range(n_requests)]
+    # high-variance budgets: where early exit + slot refill pay off
+    news = [int(rng.choice([2, 4, 8, 24])) for _ in range(n_requests)]
+    return prompts, news
+
+
+def _run_naive(model, params, prompts, news, max_batch: int, bucket: int):
+    """Flush engine, chunk by chunk, timing each chunk's completion (the
+    earliest moment any of its requests sees a token)."""
+    eng = ServeEngine(model, params, max_batch=max_batch, bucket=bucket)
+    t0 = time.perf_counter()
+    ttfts, n_tok = [], 0
+    for i in range(0, len(prompts), max_batch):
+        for p, m in zip(prompts[i:i + max_batch], news[i:i + max_batch]):
+            eng.submit(p, max_new_tokens=m)
+        outs = eng.flush()
+        t_done = time.perf_counter() - t0
+        ttfts += [t_done] * len(outs)
+        n_tok += sum(len(o) for o in outs)
+    wall = time.perf_counter() - t0
+    return dict(tok_s=round(n_tok / wall, 2), ttft_mean_s=round(
+        float(np.mean(ttfts)), 4), wall_s=round(wall, 3), tokens=n_tok)
+
+
+def _run_continuous(model, params, prompts, news, max_slots: int,
+                    S_max: int, bucket: int, warm_misses=None):
+    eng = ContinuousBatchingEngine(model, params, max_slots=max_slots,
+                                   S_max=S_max, bucket=bucket)
+    if warm_misses is not None:
+        eng.compile_cache = warm_misses  # reuse the warmed cache
+    t0 = time.perf_counter()
+    for p, m in zip(prompts, news):
+        eng.submit(p, max_new_tokens=m)
+    outs = eng.run()
+    wall = time.perf_counter() - t0
+    n_tok = sum(len(o) for o in outs)
+    s = eng.stats
+    return dict(tok_s=round(n_tok / wall, 2),
+                ttft_mean_s=round(s["ttft_mean_s"], 4),
+                wall_s=round(wall, 3), tokens=n_tok,
+                decode_steps=s["decode_steps"],
+                compile_misses=s["compile_misses"],
+                compile_hits=s["compile_hits"]), eng
+
+
+def bench_arch(name: str, n_requests: int, seed: int, reps: int = 3):
+    cfg = TINY if name == "tiny" else get_config(name).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(seed))
+    prompts, news = _workload(cfg, n_requests, seed)
+    max_batch = 4
+    bucket = 8
+    S_max = 24 + 24 + 8  # longest prompt bucket + largest budget + slack
+
+    # ---- warm both engines (compiles excluded from the timed waves) ----
+    _run_naive(model, params, prompts, news, max_batch, bucket)
+    warm, warm_eng = _run_continuous(model, params, prompts, news, max_batch,
+                                     S_max, bucket)
+
+    # ---- timed waves: interleaved best-of-reps (machine-noise robust,
+    # same protocol as microbench._t_min_group) ----
+    naive, cont, eng = None, None, None
+    for _ in range(reps):
+        n = _run_naive(model, params, prompts, news, max_batch, bucket)
+        c, eng = _run_continuous(model, params, prompts, news, max_batch,
+                                 S_max, bucket,
+                                 warm_misses=warm_eng.compile_cache)
+        naive = n if naive is None or n["wall_s"] < naive["wall_s"] else naive
+        cont = c if cont is None or c["wall_s"] < cont["wall_s"] else cont
+    steady_recompiles = eng.compile_cache.misses - warm["compile_misses"]
+    row = dict(arch=cfg.name, n_params=model.n_params, n_requests=n_requests,
+               naive=naive, continuous=cont,
+               speedup=round(cont["tok_s"] / max(naive["tok_s"], 1e-9), 3),
+               steady_state_recompiles=int(steady_recompiles),
+               continuous_ge_naive=cont["tok_s"] >= naive["tok_s"])
+    print(f"  {cfg.name:24s} naive {naive['tok_s']:7.1f} tok/s "
+          f"(ttft {naive['ttft_mean_s']:.2f}s) | continuous "
+          f"{cont['tok_s']:7.1f} tok/s (ttft {cont['ttft_mean_s']:.2f}s) "
+          f"x{row['speedup']:.2f}, {cont['decode_steps']} steps, "
+          f"{steady_recompiles} steady-state recompiles")
+    return row
+
+
+def run(quick: bool = True, seed: int = 0):
+    rows = [bench_arch("tiny", n_requests=16 if quick else 32, seed=seed)]
+    rows.append(bench_arch("qwen3-4b", n_requests=12 if quick else 24,
+                           seed=seed))
+    return {"table": "serve", "rows": rows,
+            "continuous_ge_naive_tiny": rows[0]["continuous_ge_naive"],
+            "no_steady_state_recompiles": all(
+                r["steady_state_recompiles"] == 0 for r in rows),
+            "all_ok": (rows[0]["continuous_ge_naive"] and all(
+                r["steady_state_recompiles"] == 0 for r in rows))}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    res = run(quick=not a.full, seed=a.seed)
+    print("saved:", C.save_result("BENCH_serve", res))
+
+
+if __name__ == "__main__":
+    main()

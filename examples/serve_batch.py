@@ -1,12 +1,14 @@
-"""Batched serving demo across architecture families — the path the
-decode_32k / long_500k dry-run shapes lower.
+"""Continuous-batching serving demo across architecture families — the path
+the decode_32k / long_500k dry-run shapes lower.
 
     PYTHONPATH=src python examples/serve_batch.py
 
 Serves reduced variants of three assigned archs (dense gemma2 with
 local/global attention + softcaps, hybrid jamba with Mamba+MoE layers, and
-pixtral with the vision-stub frontend) through the batched engine:
-prefill builds the KV/SSM-state cache, then one-token decode steps.
+pixtral with the vision-stub frontend) through the slot-based engine:
+bucketed per-request prefill admits each prompt into a free decode slot,
+one compiled step advances all active slots, and finished requests retire
+early to make room for the queue.
 """
 import time
 
@@ -15,7 +17,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import Model
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import ContinuousBatchingEngine
 
 ARCHS = ["gemma2-27b", "jamba-1.5-large-398b", "pixtral-12b"]
 
@@ -24,15 +26,18 @@ for name in ARCHS:
     cfg = get_config(name).reduced()
     model = Model(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, max_batch=4, bucket=16)
+    engine = ContinuousBatchingEngine(model, params, max_slots=4, S_max=96,
+                                      bucket=16)
     for i in range(5):
         prompt = rng.integers(0, cfg.vocab, size=int(rng.integers(4, 20)))
         engine.submit(prompt, max_new_tokens=8)
     t0 = time.time()
-    outs = engine.flush()
+    outs = engine.run()
     dt = time.time() - t0
     n = sum(len(o) for o in outs)
+    s = engine.stats
     print(f"{cfg.name:32s} family={cfg.family:6s} "
           f"{model.n_params / 1e6:6.1f}M params | {len(outs)} reqs, "
-          f"{n} tokens in {dt:5.1f}s ({n / dt:5.1f} tok/s)")
+          f"{n} tokens in {dt:5.1f}s ({n / dt:5.1f} tok/s, "
+          f"{s['decode_steps']} steps, {s['compile_misses']} compiles)")
     print(f"  first generation: {outs[0].tolist()}")

@@ -217,6 +217,9 @@ class FLConfig:
     # ZO hot-path execution route (core/dispatch.py): "auto" uses the fused
     # flat Pallas kernels when the layout supports it, else the pytree route.
     zo_backend: str = "auto"  # auto | pallas | ref
+    # beyond-paper: K-direction ZO estimator per local step (core/zo.py);
+    # clients then upload T*K scalars per round
+    n_dirs: int = 1
     # MEERKAT-VP (Alg. 1) knobs — defaults follow Appendix C.1 Table 4
     vp_calibration_steps: int = 100
     vp_init_steps: int = 20

@@ -47,6 +47,14 @@ class Client:
                 for k, v in sel.items()}
 
 
+def _per_step(g: np.ndarray) -> np.ndarray:
+    """Reduce a client's uploaded scalars to one per local step: [T] stays
+    [T]; multi-direction [T, K] averages over K (the K directions estimate
+    the same step gradient, so their mean is the step's GradIP scalar)."""
+    g = np.asarray(g)
+    return g.mean(axis=1) if g.ndim > 1 else g
+
+
 @dataclass
 class CommLog:
     up_bytes: int = 0
@@ -96,7 +104,9 @@ class FederatedZO:
         key = (T, n_group)
         if key not in self._batch_runs:
             run = ZO.make_local_run(self.loss_fn, self.space, self.fl.eps,
-                                    self.fl.lr, backend=self.backend,
+                                    self.fl.lr,
+                                    n_dirs=getattr(self.fl, "n_dirs", 1),
+                                    backend=self.backend,
                                     n_carries=n_group)
 
             def group(params, keys, batches):
@@ -132,10 +142,13 @@ class FederatedZO:
             deltas.append(self._recon(keys, gs))
             for c, g in zip(cs, np.asarray(gs)):
                 gs_by_cid[c.cid] = g
-                self.comm.add(up=4 * T, down=self._down_bytes(T))
+                # upload = every projected-gradient scalar: T with n_dirs=1,
+                # T*K for the multi-direction estimator ([T, K] gs)
+                self.comm.add(up=4 * g.size, down=self._down_bytes(T))
                 if gp_vec is not None:
                     ips, _, _ = gradip_trajectory(self.space, keys,
-                                                  jnp.asarray(g), gp_vec)
+                                                  jnp.asarray(_per_step(g)),
+                                                  gp_vec)
                     self.gradip_log[c.cid].append(np.asarray(ips))
         # (3) aggregate reconstructed sparse updates (+ optional FedAvgM
         # server momentum on the sparse value vector — beyond-paper)
@@ -151,7 +164,10 @@ class FederatedZO:
 
     def _down_bytes(self, T: int) -> int:
         if self.high_freq:
-            return 4 * T + 8  # aggregated scalars + next seed
+            # aggregated scalars + next seed; with the K-direction
+            # estimator clients replay mean_k g_tk * z_tk, so all T*K
+            # per-direction scalars must come down (mirrors the uplink)
+            return 4 * T * getattr(self.fl, "n_dirs", 1) + 8
         return 4 * self.space.n  # sparse (or dense/LoRA) model refresh
 
     # -- calibration + VPCS (MEERKAT-VP, Alg. 1) ----------------------------
@@ -165,8 +181,8 @@ class FederatedZO:
                                                            keys, batches)
         trajs = []
         for c, g in zip(self.clients, np.asarray(gs)):
-            ips, _, _ = gradip_trajectory(self.space, keys, jnp.asarray(g),
-                                          gp_vec)
+            ips, _, _ = gradip_trajectory(self.space, keys,
+                                          jnp.asarray(_per_step(g)), gp_vec)
             trajs.append(np.asarray(ips))
             c.ptr = 0  # calibration does not consume training order
         results, flagged = VPCS.select_clients(trajs, self.fl)

@@ -5,8 +5,16 @@ max / normalizer / value accumulator.  GQA layout: queries are grouped per
 KV head ([B, KVH, G, dh]); the kernel grid is (B, KVH, S_blocks) with the
 KV-block axis innermost (sequential accumulation).
 
-Targets the decode_32k / long_500k serving shapes; validated in
-interpret=True mode against the pure-jnp oracle in ``ref.py``.
+Serving contract (the hot path of ``models/layers.decode_self_attention``):
+
+* ``length`` is per-batch-row ([B] int32) — each continuous-batching slot
+  attends to its own valid prefix of the shared fixed-capacity cache.
+* ``softcap`` (gemma2-style logit capping) is applied pre-masking, matching
+  ``layers.softcap``.
+* ``S`` must be a block multiple; ``ops.flash_decode`` pads arbitrary cache
+  lengths (padded keys sit at positions >= S >= length, always masked).
+
+Validated in interpret=True mode against the pure-jnp oracle in ``ref.py``.
 """
 from __future__ import annotations
 
@@ -21,7 +29,8 @@ NEG_INF = -1e30
 
 
 def _decode_attn_kernel(L_ref, q_ref, k_ref, v_ref, o_ref,
-                        m_scr, l_scr, acc_scr, *, block_s: int, scale: float):
+                        m_scr, l_scr, acc_scr, *, block_s: int, scale: float,
+                        softcap: float):
     i = pl.program_id(2)
 
     @pl.when(i == 0)
@@ -34,6 +43,8 @@ def _decode_attn_kernel(L_ref, q_ref, k_ref, v_ref, o_ref,
     k = k_ref[0, :, 0].astype(jnp.float32)       # [Sblk, dh]
     v = v_ref[0, :, 0].astype(jnp.float32)       # [Sblk, dh]
     s = jnp.dot(q, k.T) * scale                  # [G, Sblk]
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
     pos = i * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(pos < L_ref[0], s, NEG_INF)
 
@@ -51,24 +62,26 @@ def _decode_attn_kernel(L_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def decode_attention(q, k, v, length, *, block_s: int = 512,
-                     interpret: bool = True):
-    """q: [B, KVH, G, dh]; k, v: [B, S, KVH, dh]; length: int (valid KV).
+                     softcap: float = 0.0, interpret: bool = True):
+    """q: [B, KVH, G, dh]; k, v: [B, S, KVH, dh]; length: int or [B] int32
+    (per-row valid KV prefix).
 
-    Returns [B, KVH, G, dh] attention output (softmax over positions < length).
+    Returns [B, KVH, G, dh] attention output (softmax over positions <
+    length, with optional pre-mask tanh softcapping of the logits).
     """
     B, KVH, G, dh = q.shape
     S = k.shape[1]
     assert S % block_s == 0, (S, block_s)
     grid = (B, KVH, S // block_s)
     scale = dh ** -0.5
-    L_arr = jnp.asarray(length, jnp.int32).reshape(1)
+    L_arr = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (B,))
     kernel = functools.partial(_decode_attn_kernel, block_s=block_s,
-                               scale=scale)
+                               scale=scale, softcap=float(softcap))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1,), lambda b, h, i: (0,)),
+            pl.BlockSpec((1,), lambda b, h, i: (b,)),
             pl.BlockSpec((1, 1, G, dh), lambda b, h, i: (b, h, 0, 0)),
             pl.BlockSpec((1, block_s, 1, dh), lambda b, h, i: (b, i, h, 0)),
             pl.BlockSpec((1, block_s, 1, dh), lambda b, h, i: (b, i, h, 0)),

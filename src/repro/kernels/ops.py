@@ -89,12 +89,24 @@ def gradip_flat(gp_flat, z_flat, g, *, block_r: int = 256,
     return gradip_reduce(gp2, z2, g, block_r=block_r, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
-def flash_decode(q, k, v, length, *, block_s: int = 512,
+@functools.partial(jax.jit, static_argnames=("block_s", "softcap",
+                                             "interpret"))
+def flash_decode(q, k, v, length, *, block_s: int = 512, softcap: float = 0.0,
                  interpret: bool | None = None):
-    """GQA flash-decode attention; see decode_attention.py for layout."""
+    """GQA flash-decode attention; see decode_attention.py for layout.
+
+    ``length`` may be a scalar or per-row [B].  Cache lengths that are not a
+    block multiple are zero-padded up to one (the pad positions sit at
+    ``pos >= S >= length`` and are always masked), so model-shaped caches
+    of any capacity route through the kernel."""
     interpret = _default_interpret() if interpret is None else interpret
-    return decode_attention(q, k, v, length, block_s=block_s,
+    S = k.shape[1]
+    bs = min(block_s, -(-S // SUB) * SUB)  # small caches: one sublane-tiled block
+    pad = (-S) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return decode_attention(q, k, v, length, block_s=bs, softcap=softcap,
                             interpret=interpret)
 
 

@@ -39,14 +39,19 @@ def mamba_scan_ref(dt, B_in, C_in, x, A):
     return ys.swapaxes(0, 1), h_last
 
 
-def decode_attention_ref(q, k, v, length):
-    """q: [B,KVH,G,dh]; k,v: [B,S,KVH,dh]; softmax over positions < length."""
+def decode_attention_ref(q, k, v, length, softcap: float = 0.0):
+    """q: [B,KVH,G,dh]; k,v: [B,S,KVH,dh]; softmax over positions < length.
+
+    ``length`` is a scalar or per-row [B] (continuous-batching slots)."""
     B, KVH, G, dh = q.shape
     S = k.shape[1]
     scale = dh ** -0.5
     s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    mask = jnp.arange(S)[None, None, None, :] < length
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    L = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (B,))
+    mask = jnp.arange(S)[None, None, None, :] < L[:, None, None, None]
     s = jnp.where(mask, s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))

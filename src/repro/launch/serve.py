@@ -1,8 +1,9 @@
-"""Serving driver: batched generation with any registered arch (reduced).
+"""Serving driver: continuous-batching generation with any registered arch.
 
 Demonstrates the inference path the decode_32k / long_500k dry-run shapes
-lower: prefill + KV/SSM-state cache + one-token decode steps, through the
-batched ServeEngine.
+lower: per-request bucketed prefill into fixed-capacity decode slots, then
+compiled one-token decode steps over all active slots, with mid-decode
+admission and per-slot early exit (serving/engine.py).
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --requests 6
@@ -18,36 +19,56 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.tiny import TINY
 from repro.models import Model
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import ContinuousBatchingEngine, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "naive"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "ref"],
+                    help="decode-attention route (continuous engine)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots (continuous) / batch size (naive)")
+    ap.add_argument("--s-max", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     a = ap.parse_args()
 
     cfg = TINY if a.arch == "tiny" else get_config(a.arch).reduced()
     model = Model(cfg)
     params = model.init(jax.random.key(a.seed))
-    print(f"arch={cfg.name} params={model.n_params:,}")
+    print(f"arch={cfg.name} params={model.n_params:,} engine={a.engine}")
 
     rng = np.random.default_rng(a.seed)
-    engine = ServeEngine(model, params, max_batch=a.max_batch, bucket=16)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24)))
+               for _ in range(a.requests)]
     t0 = time.time()
-    for i in range(a.requests):
-        prompt = rng.integers(0, cfg.vocab, size=int(rng.integers(4, 24)))
-        engine.submit(prompt, max_new_tokens=a.max_new)
-    outs = engine.flush()
+    if a.engine == "continuous":
+        engine = ContinuousBatchingEngine(
+            model, params, max_slots=a.max_batch, S_max=a.s_max, bucket=16,
+            decode_backend=a.backend)
+        for p in prompts:
+            engine.submit(p, max_new_tokens=a.max_new)
+        outs = engine.run()
+        stats = engine.stats
+    else:
+        engine = ServeEngine(model, params, max_batch=a.max_batch, bucket=16)
+        for p in prompts:
+            engine.submit(p, max_new_tokens=a.max_new)
+        outs = engine.flush()
+        stats = {}
     dt = time.time() - t0
     for i, o in enumerate(outs):
         print(f"req {i}: generated {len(o)} tokens: {o.tolist()}")
     n_tok = sum(len(o) for o in outs)
-    print(f"{n_tok} tokens in {dt:.1f}s ({n_tok / dt:.1f} tok/s, "
-          f"batched prefill+decode with cache)")
+    extra = (f" ttft={stats['ttft_mean_s']:.2f}s "
+             f"compiles={stats['compile_misses']}" if stats else "")
+    print(f"{n_tok} tokens in {dt:.1f}s ({n_tok / dt:.1f} tok/s,"
+          f" {a.engine} batching with cache{extra})")
 
 
 if __name__ == "__main__":

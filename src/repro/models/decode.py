@@ -8,7 +8,10 @@ Cache layout (all leaves stacked over periods on axis 0):
 * slstm:             ``{'c','n','h','m': [n,B,E]}``
 * cross-attn (audio): ``{'ck','cv': [n,B,Senc,KV,hd]}``
 
-``cache['pos']`` is the number of tokens already absorbed.
+``cache['pos']`` is a per-row [B] int32 vector: the number of tokens each
+sequence has absorbed.  Rows are independent — continuous-batching slots
+prefill and retire at different positions — and ``decode_step(active=...)``
+freezes the state (and position) of inactive slots.
 """
 from __future__ import annotations
 
@@ -65,7 +68,7 @@ def init_cache(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16):
     n = cfg.n_periods
     stack = {f"p{i}": _mixer_cache(cfg, mixer, n, B, S_max, dtype)
              for i, (mixer, _) in enumerate(cfg.layer_pattern)}
-    return {"stack": stack, "pos": jnp.zeros((), jnp.int32)}
+    return {"stack": stack, "pos": jnp.zeros((B,), jnp.int32)}
 
 
 def abstract_cache(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16):
@@ -105,14 +108,26 @@ def _mixer_decode(x1, lp, cc, mixer, cfg, ctx, cur_pos):
 
 
 def decode_step(params, token, cache, cfg: ModelConfig,
-                ctx: ShardCtx = DEFAULT_CTX):
-    """token: [B] int32 -> (logits [B,V], new cache)."""
+                ctx: ShardCtx = DEFAULT_CTX, active=None):
+    """token: [B] int32 -> (logits [B,V], new cache).
+
+    ``active``: optional [B] bool — inactive rows (drained / empty
+    continuous-batching slots) keep their cache state and position
+    unchanged, so a finished request's slot is untouched while the rest of
+    the batch keeps decoding.  Their logits are garbage; callers ignore
+    them."""
     B = token.shape[0]
     x = params["embed"][token][:, None, :]  # [B,1,D]
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
-    cur = cache["pos"]
+    cur = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32).reshape(-1),
+                           (B,))
     x = _maybe_posenc(x, cfg, offset=cur)
+    # decode rows are independent requests: MoE dispatch must always run
+    # per row (own capacity pool), or co-batched requests contend for
+    # expert capacity and batched decode diverges from single-request
+    act = (jnp.ones((B,), bool) if active is None
+           else jnp.asarray(active, bool))
 
     def body(xx, inp):
         pp, cc = inp
@@ -120,33 +135,57 @@ def decode_step(params, token, cache, cfg: ModelConfig,
         for i, (mixer, ffn) in enumerate(cfg.layer_pattern):
             xx, new_cc[f"p{i}"] = _mixer_decode(xx, pp[f"p{i}"], cc[f"p{i}"],
                                                 mixer, cfg, ctx, cur)
-            xx, _ = _ffn_fwd(xx, pp[f"p{i}"], ffn, cfg, ctx)
+            xx, _ = _ffn_fwd(xx, pp[f"p{i}"], ffn, cfg, ctx, token_valid=act)
         return xx, new_cc
 
     x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"]),
                                 unroll=ctx.scan_unroll)
     x = L.apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
     logits = unembed(x, params, cfg)[:, 0]
-    return logits, {"stack": new_stack, "pos": cur + 1}
+    if active is None:
+        new_pos = cur + 1
+    else:
+        def freeze(new, old):
+            a = act.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(a, new, old)
+
+        new_stack = jax.tree.map(freeze, new_stack, cache["stack"])
+        new_pos = cur + act.astype(jnp.int32)
+    return logits, {"stack": new_stack, "pos": new_pos}
 
 
 # ------------------------------------------------------------- prefill -----
-def _fill_attn_cache(k, v, W: int):
-    """k,v: [B,S,KV,hd] -> rolling buffer of size W aligned to slot = pos %W."""
+def _fill_attn_cache(k, v, W: int, lengths=None):
+    """k,v: [B,S,KV,hd] -> rolling buffer of size W aligned to slot = pos %W.
+
+    ``lengths``: per-row valid length (right-padded prefill).  Each row's
+    buffer is aligned to *its own* position stream: slot j holds the key at
+    absolute position p with p % W == j and p in [max(0, len-W), len) —
+    exactly where ``decode_self_attention`` will read/write next."""
     B, S, KV, hd = k.shape
     if S <= W:
         pad = W - S
         kb = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         vb = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         return kb, vb
-    start = S - W
-    j = jnp.arange(W)
-    p = start + jnp.mod(j - start, W)
-    return k[:, p], v[:, p]
+    j = jnp.arange(W)[None, :]
+    if lengths is None:
+        start = jnp.full((B, 1), S - W, jnp.int32)
+    else:
+        start = jnp.maximum(lengths[:, None] - W, 0)
+    p = start + jnp.mod(j - start, W)  # [B, W]
+    p = jnp.minimum(p, S - 1)  # rows with len < S: pad entries, masked later
+    idx = p[:, :, None, None]
+    return (jnp.take_along_axis(k, idx, axis=1),
+            jnp.take_along_axis(v, idx, axis=1))
 
 
-def _mixer_prefill(x, lp, mixer, cfg, ctx, positions, enc_out, S_max):
-    """Returns (x_out, cache_entry) mirroring _mixer_fwd + state capture."""
+def _mixer_prefill(x, lp, mixer, cfg, ctx, positions, enc_out, S_max,
+                   valid=None, lengths=None):
+    """Returns (x_out, cache_entry) mirroring _mixer_fwd + state capture.
+
+    ``valid``/``lengths``: [B,S] key-validity mask and per-row lengths for
+    right-padded batches (None -> every position is real)."""
     h = L.apply_norm(x, lp["norm"], cfg.norm, cfg.norm_eps)
     cc = {}
     if mixer in ("attn", "local_attn"):
@@ -159,24 +198,26 @@ def _mixer_prefill(x, lp, mixer, cfg, ctx, positions, enc_out, S_max):
             k = L.apply_rope(k, positions, cfg.rope_theta, partial)
         local = mixer == "local_attn"
         window = cfg.sliding_window if local else 0
+        kv_mask = None if valid is None else valid[:, None, :]
         y = L.blocked_gqa_attention(q, k, v, cfg, ctx, window=window,
                                     q_block=ctx.attn_q_block,
-                                    unroll=ctx.unroll_chunks)
+                                    unroll=ctx.unroll_chunks, kv_mask=kv_mask)
         y = jnp.einsum("bsx,xe->bse", y.reshape(B, S, -1), lp["wo"])
         W = S_max
         if local and cfg.sliding_window:
             W = min(S_max, cfg.sliding_window)
-        cc["k"], cc["v"] = _fill_attn_cache(k, v, W)
+        cc["k"], cc["v"] = _fill_attn_cache(k, v, W, lengths=lengths)
     elif mixer == "mamba":
         y, (buf, st) = SSM.mamba_forward(h, lp, cfg.ssm, chunk=ctx.mamba_chunk,
-                                         return_state=True)
+                                         return_state=True, valid=valid)
         cc["conv"], cc["state"] = buf, st
     elif mixer == "mlstm":
         y, (C, n, m) = XL.mlstm_forward(h, lp, cfg.xlstm, block=ctx.mlstm_block,
-                                        return_state=True)
+                                        return_state=True, valid=valid)
         cc["C"], cc["n"], cc["m"] = C, n, m
     elif mixer == "slstm":
-        y, (c, n, hh, m) = XL.slstm_forward(h, lp, cfg.xlstm, return_state=True)
+        y, (c, n, hh, m) = XL.slstm_forward(h, lp, cfg.xlstm, return_state=True,
+                                            valid=valid)
         cc["c"], cc["n"], cc["h"], cc["m"] = c, n, hh, m
     else:
         raise ValueError(mixer)
@@ -192,16 +233,33 @@ def _mixer_prefill(x, lp, mixer, cfg, ctx, positions, enc_out, S_max):
 
 
 def prefill(params, batch, cfg: ModelConfig, ctx: ShardCtx = DEFAULT_CTX,
-            S_max: int = 0):
-    """Process the prompt; returns (last-token logits [B,V], cache)."""
+            S_max: int = 0, lengths=None):
+    """Process the prompt; returns (last-token logits [B,V], cache).
+
+    ``lengths``: per-row [B] int32 valid *token* counts for right-padded
+    batches.  Positions stay ``arange(S)`` (right-pad keeps every real
+    token at its true offset); pad keys are masked out of attention,
+    recurrent mixers freeze their state past each row's length, and the
+    returned logits/cache position are taken at each row's last real
+    token — so a padded batched prefill is equivalent to prefilling each
+    row alone at its exact length.  ``None`` means every position is real.
+    """
     x = embed_input(params, batch, cfg)
     x = _maybe_posenc(x, cfg)
-    S_total = x.shape[1]
+    B, S_total = x.shape[0], x.shape[1]
     S_max = S_max or S_total
     spec = ctx.act_spec(x.shape[0])
     if spec is not None:
         x = ctx.constrain(x, spec)
     positions = jnp.broadcast_to(jnp.arange(S_total), x.shape[:2])
+    if lengths is None:
+        lengths_total = jnp.full((B,), S_total, jnp.int32)
+        valid = None
+    else:
+        # frontend prefixes (vision patches) are always-valid real positions
+        extra = S_total - batch["tokens"].shape[1]
+        lengths_total = jnp.asarray(lengths, jnp.int32).reshape(-1) + extra
+        valid = jnp.arange(S_total)[None, :] < lengths_total[:, None]
     enc_out = None
     if cfg.encoder is not None:
         enc_out = encoder_forward(params, batch["audio_embeds"].astype(x.dtype),
@@ -210,9 +268,13 @@ def prefill(params, batch, cfg: ModelConfig, ctx: ShardCtx = DEFAULT_CTX,
     def body(xx, pp):
         new_cc = {}
         for i, (mixer, ffn) in enumerate(cfg.layer_pattern):
-            xx, new_cc[f"p{i}"] = _mixer_prefill(xx, pp[f"p{i}"], mixer, cfg,
-                                                 ctx, positions, enc_out, S_max)
-            xx, _ = _ffn_fwd(xx, pp[f"p{i}"], ffn, cfg, ctx)
+            xx, new_cc[f"p{i}"] = _mixer_prefill(
+                xx, pp[f"p{i}"], mixer, cfg, ctx, positions, enc_out, S_max,
+                valid=valid, lengths=None if valid is None else lengths_total)
+            # pad tokens must also stay out of MoE capacity dispatch, or
+            # they evict real tokens' expert assignments across rows
+            xx, _ = _ffn_fwd(xx, pp[f"p{i}"], ffn, cfg, ctx,
+                             token_valid=valid)
         if spec is not None:
             xx = ctx.constrain(xx, spec)
         return xx, new_cc
@@ -220,6 +282,10 @@ def prefill(params, batch, cfg: ModelConfig, ctx: ShardCtx = DEFAULT_CTX,
     x, stack_cache = jax.lax.scan(body, x, params["stack"],
                                   unroll=ctx.scan_unroll)
     x = L.apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
-    logits = unembed(x[:, -1:], params, cfg)[:, 0]
-    return logits, {"stack": stack_cache,
-                    "pos": jnp.asarray(S_total, jnp.int32)}
+    if valid is None:
+        last = x[:, -1:]
+    else:
+        last = jnp.take_along_axis(x, (lengths_total - 1)[:, None, None],
+                                   axis=1)
+    logits = unembed(last, params, cfg)[:, 0]
+    return logits, {"stack": stack_cache, "pos": lengths_total}

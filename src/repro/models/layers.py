@@ -153,18 +153,26 @@ def self_attention(x, p, cfg, positions, *, local: bool, mask_extra=None,
 
 
 def blocked_gqa_attention(q, k, v, cfg, ctx, *, window: int, q_block: int,
-                          unroll: bool = False):
+                          unroll: bool = False, kv_mask=None):
     """Query-block-chunked causal attention: scores are materialized per
     block [B,H,q_block,Sk] instead of [B,H,S,S].  Falls back to one full
-    block when q_block does not apply."""
+    block when q_block does not apply.
+
+    ``kv_mask``: [B, 1, Sk] bool key-validity (right-padded prefill masks
+    its pad keys here), ANDed into the causal mask."""
     B, S, H, hd = q.shape
     if not q_block or S % q_block or S <= q_block:
-        return gqa_attention(q, k, v, causal_mask(S, S, window), cfg, ctx)
+        mask = causal_mask(S, S, window)
+        if kv_mask is not None:
+            mask = mask & kv_mask
+        return gqa_attention(q, k, v, mask, cfg, ctx)
     nb = S // q_block
     qb = q.reshape(B, nb, q_block, H, hd).swapaxes(0, 1)
 
     def blk(qi, off):
         mask = causal_mask(q_block, S, window, offset=off)
+        if kv_mask is not None:
+            mask = mask & kv_mask
         return gqa_attention(qi, k, v, mask, cfg, ctx)
 
     if unroll:
@@ -328,33 +336,81 @@ def grouped_gqa_attention(q, k, v, valid, cfg, ctx=None):
     return out.reshape(B, Sq, H, hd).astype(v.dtype)
 
 
+DECODE_BACKENDS = ("auto", "pallas", "ref")
+
+
+def resolve_decode_backend(backend, cfg, ctx=None) -> str:
+    """Map a requested decode-attention backend to 'pallas' | 'ref'.
+
+    Mirrors ``core/dispatch.resolve_backend``: "auto" prefers the Pallas
+    flash-decode kernel (interpret mode off-TPU, see kernels/ops.py) and
+    falls back to the grouped jnp path for layouts the kernel does not
+    cover — a sharded mesh (the jnp path carries the GSPMD sharding
+    constraints) or, compiled on a real TPU, a head_dim off the 128-lane
+    tile."""
+    backend = backend or "auto"
+    if backend not in DECODE_BACKENDS:
+        raise ValueError(
+            f"decode backend must be one of {DECODE_BACKENDS}, got {backend!r}")
+    if backend != "auto":
+        return backend
+    if ctx is not None and ctx.mesh is not None:
+        return "ref"
+    from repro.kernels.ops import _default_interpret
+    if not _default_interpret() and cfg.resolved_head_dim % 128:
+        return "ref"
+    return "pallas"
+
+
 def decode_self_attention(x1, p, cfg, cache_k, cache_v, cur_pos, *,
                           local: bool, ctx=None):
     """One-token decode. x1: [B,1,D]; cache_k/v: [B,W,KV,hd] (rolling when
-    local). Returns (out [B,1,D], new_k, new_v)."""
+    local); cur_pos: scalar or per-row [B] (continuous-batching slots each
+    sit at their own position).  Returns (out [B,1,D], new_k, new_v).
+
+    Routes through the Pallas flash-decode kernel or the grouped jnp path
+    per ``ctx.decode_backend`` (see :func:`resolve_decode_backend`)."""
     B = x1.shape[0]
     hd = cfg.resolved_head_dim
     W = cache_k.shape[1]
     q, k, v = _project_qkv(x1, p, cfg)  # [B,1,H,hd], [B,1,KV,hd]
+    pos_vec = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32).reshape(-1),
+                               (B,))
     if cfg.rope_style != "none":
         partial = cfg.rope_partial_factor if cfg.rope_style == "partial" else 1.0
-        pos = jnp.full((B, 1), cur_pos, jnp.int32)
+        pos = pos_vec[:, None]
         q = apply_rope(q, pos, cfg.rope_theta, partial)
         k = apply_rope(k, pos, cfg.rope_theta, partial)
-    slot = jnp.mod(cur_pos, W) if (local and cfg.sliding_window) else cur_pos
+    rolling = bool(local and cfg.sliding_window)
+    slot = jnp.mod(pos_vec, W) if rolling else jnp.minimum(pos_vec, W - 1)
     # cast to the cache dtype BEFORE the update: rope upcasts k to f32, and
     # dynamic_update_slice would promote the *entire cache* to f32 per layer
     # (a full-cache convert round-trip; §Perf iteration 3)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k.astype(cache_k.dtype), slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v.astype(cache_v.dtype), slot, axis=1)
-    ki = jnp.arange(W)[None, None, :]  # [1,1,W]
-    if local and cfg.sliding_window:
-        valid = (ki <= slot) | (cur_pos >= W)  # rolling buffer: all valid once full
+    upd = jax.vmap(
+        lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(c, u, s, axis=0))
+    cache_k = upd(cache_k, k.astype(cache_k.dtype), slot)
+    cache_v = upd(cache_v, v.astype(cache_v.dtype), slot)
+    backend = resolve_decode_backend(
+        getattr(ctx, "decode_backend", None) if ctx is not None else None,
+        cfg, ctx)
+    if backend == "pallas":
+        # both cache layouts expose a per-row valid *prefix*: global caches
+        # hold positions [0, pos], a full rolling buffer holds all W slots
+        lengths = jnp.minimum(pos_vec + 1, W) if rolling else pos_vec + 1
+        from repro.kernels.ops import flash_decode
+        KV = cfg.n_kv_heads
+        qg = q[:, 0].reshape(B, KV, cfg.n_heads // KV, hd)
+        out = flash_decode(qg, cache_k, cache_v, lengths,
+                           softcap=cfg.attn_softcap)
+        out = out.reshape(B, 1, cfg.n_heads, hd).astype(cache_v.dtype)
     else:
-        valid = ki <= cur_pos
-    out = grouped_gqa_attention(q, cache_k, cache_v, valid, cfg, ctx)
+        ki = jnp.arange(W)[None, None, :]  # [1,1,W]
+        pv = pos_vec[:, None, None]
+        if rolling:
+            valid = (ki <= slot[:, None, None]) | (pv >= W)
+        else:
+            valid = ki <= pv
+        out = grouped_gqa_attention(q, cache_k, cache_v, valid, cfg, ctx)
     out = jnp.einsum("bsx,xe->bse", out.reshape(B, 1, -1), p["wo"])
     return out, cache_k, cache_v
 

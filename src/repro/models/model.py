@@ -33,11 +33,13 @@ class Model:
         return T.lm_loss(params, batch, self.cfg, self.ctx,
                          per_example=per_example)
 
-    def prefill(self, params, batch, S_max: int = 0):
-        return D.prefill(params, batch, self.cfg, self.ctx, S_max=S_max)
+    def prefill(self, params, batch, S_max: int = 0, lengths=None):
+        return D.prefill(params, batch, self.cfg, self.ctx, S_max=S_max,
+                         lengths=lengths)
 
-    def decode_step(self, params, token, cache):
-        return D.decode_step(params, token, cache, self.cfg, self.ctx)
+    def decode_step(self, params, token, cache, active=None):
+        return D.decode_step(params, token, cache, self.cfg, self.ctx,
+                             active=active)
 
     def init_cache(self, B: int, S_max: int, dtype=jnp.bfloat16):
         return D.init_cache(self.cfg, B, S_max, dtype)

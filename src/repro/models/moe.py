@@ -59,33 +59,71 @@ def _shared_expert(x2d, p, act):
     return jnp.einsum("tf,fd->td", h, p["sw2"])
 
 
-def moe_dense_ref(x, p, mcfg: MoEConfig, act: str = "silu"):
-    """x: [B, S, D] -> (y, aux).  One-hot capacity dispatch (oracle)."""
+def moe_dense_ref(x, p, mcfg: MoEConfig, act: str = "silu", valid=None):
+    """x: [B, S, D] -> (y, aux).  One-hot capacity dispatch (oracle).
+
+    ``valid``: [B] or [B, S] bool token mask (right-padded serving
+    batches / inactive continuous-batching slots).  With a mask, dispatch
+    runs **per row**: each row gets its own capacity cumsum, its own
+    capacity threshold derived from its own valid-token count, and its own
+    expert buffers.  That makes a padded batched row's routing identical
+    to routing that row alone at its exact length — no cross-row capacity
+    contention — which is the serving bit-match contract.  ``None`` keeps
+    the original batch-global dispatch (training)."""
     B, S, D = x.shape
     E, k = mcfg.n_experts, mcfg.top_k
+    cf = mcfg.capacity_factor
     x2d = x.reshape(B * S, D)
     T = B * S
-    C = max(1, math.ceil(T * k / E * mcfg.capacity_factor))
     probs = _router(x2d, p["router"])
     gate, idx = jax.lax.top_k(probs, k)  # [T,k]
     gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)
     aux = _aux_loss(probs, idx, E)
-
     onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # [T,k,E]
-    flat_oh = onehot.reshape(T * k, E)  # (token, slot) pairs, token-major
-    pos = jnp.cumsum(flat_oh, axis=0) - flat_oh  # exclusive position in expert
-    pos = jnp.sum(pos * flat_oh, axis=-1).reshape(T, k)
-    keep = pos < C
-    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
-    # dispatch [T, E, C]
-    disp = jnp.einsum("tke,tkc->tec", onehot, pos_oh)
-    xg = jnp.einsum("tec,td->ecd", disp, x2d.astype(jnp.float32)).astype(x.dtype)
-    yg = _expert_ffn(xg, p["w1"], p["w2"], p.get("w3"), act)
-    comb = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh, gate)
-    y = jnp.einsum("tec,ecd->td", comb, yg.astype(jnp.float32)).astype(x.dtype)
+
+    if valid is None:
+        C = max(1, math.ceil(T * k / E * cf))
+        flat_oh = onehot.reshape(T * k, E)  # (token, slot) pairs, token-major
+        pos = jnp.cumsum(flat_oh, axis=0) - flat_oh  # exclusive expert position
+        pos = jnp.sum(pos * flat_oh, axis=-1).reshape(T, k)
+        keep = pos < C
+        pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+        disp = jnp.einsum("tke,tkc->tec", onehot, pos_oh)
+        xg = jnp.einsum("tec,td->ecd", disp,
+                        x2d.astype(jnp.float32)).astype(x.dtype)
+        yg = _expert_ffn(xg, p["w1"], p["w2"], p.get("w3"), act)
+        comb = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh, gate)
+        y = jnp.einsum("tec,ecd->td", comb,
+                       yg.astype(jnp.float32)).astype(x.dtype)
+        y = y.reshape(B, S, D)
+    else:
+        v = jnp.broadcast_to(valid.reshape(B, -1), (B, S))
+        oh = onehot.reshape(B, S, k, E) * v.astype(jnp.float32)[..., None,
+                                                                None]
+        # per-row exclusive capacity positions (token-major within the row)
+        oh_flat = oh.reshape(B, S * k, E)
+        pos = jnp.cumsum(oh_flat, axis=1) - oh_flat
+        pos = jnp.sum(pos * oh_flat, axis=-1).reshape(B, S, k)
+        # per-row capacity from the row's own valid length (matches the
+        # global formula evaluated at T = row length); the static buffer
+        # capacity bounds it from above
+        Ls = v.sum(axis=1)  # [B]
+        C_row = jnp.maximum(1, jnp.ceil(Ls * k / E * cf)).astype(jnp.int32)
+        C = max(1, math.ceil(S * k / E * cf))
+        keep = pos < C_row[:, None, None]
+        pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]
+        disp = jnp.einsum("bske,bskc->bsec", oh, pos_oh)
+        x3d = x.astype(jnp.float32).reshape(B, S, D)
+        xg = jnp.einsum("bsec,bsd->becd", disp, x3d).astype(x.dtype)
+        yg = jax.vmap(lambda g: _expert_ffn(g, p["w1"], p["w2"],
+                                            p.get("w3"), act))(xg)
+        comb = jnp.einsum("bske,bskc,bsk->bsec", oh, pos_oh,
+                          gate.reshape(B, S, k))
+        y = jnp.einsum("bsec,becd->bsd", comb,
+                       yg.astype(jnp.float32)).astype(x.dtype)
     if "sw1" in p:
-        y = y + _shared_expert(x2d, p, act)
-    return y.reshape(B, S, D), aux
+        y = y + _shared_expert(x2d, p, act).reshape(B, S, D)
+    return y, aux
 
 
 # ------------------------------------------------------------- sharded -----
@@ -179,9 +217,12 @@ def moe_sharded(x, p, mcfg: MoEConfig, act: str, mesh, batch_axes, model_axis):
     return fn(*args)
 
 
-def moe_ffn(x, p, mcfg: MoEConfig, act: str, ctx):
-    """Dispatch between the sharded and dense implementations."""
+def moe_ffn(x, p, mcfg: MoEConfig, act: str, ctx, valid=None):
+    """Dispatch between the sharded and dense implementations.
+
+    ``valid`` (decode-time token mask) only applies to the dense path; the
+    sharded path is a training-forward route where every token is real."""
     if ctx is not None and ctx.use_sharded_moe and x.shape[0] >= ctx.dp_size:
         return moe_sharded(x, p, mcfg, act, ctx.mesh, ctx.batch_axes,
                            ctx.model_axis)
-    return moe_dense_ref(x, p, mcfg, act)
+    return moe_dense_ref(x, p, mcfg, act, valid=valid)

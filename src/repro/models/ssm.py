@@ -51,8 +51,14 @@ def _ssm_inner(dt, B_in, C_in, x, A):
 
 def mamba_forward(x, p, scfg: SSMConfig, *, chunk: int = 64,
                   return_state: bool = False, unroll: bool = False,
-                  mode: str = "scan"):
+                  mode: str = "scan", valid=None):
     """x: [B,S,D] -> [B,S,D] (training / prefill).
+
+    ``valid``: [B,S] bool for right-padded prefill.  Invalid steps zero dt,
+    which freezes the recurrence exactly (decay exp(0*A)=1, input dt*x*B=0)
+    in every mode — the final state equals the state after the last valid
+    token, and the conv history buffer is gathered per row at its own
+    length.
 
     mode:
       * "scan"   — chunked associative scan (pure XLA; simulation default).
@@ -76,6 +82,9 @@ def mamba_forward(x, p, scfg: SSMConfig, *, chunk: int = 64,
     dt_r, B_in, C_in = jnp.split(dbc, [r, r + N], axis=-1)
     dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"])
                          + p["dt_bias"])
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
+    lengths = None if valid is None else valid.sum(axis=1).astype(jnp.int32)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [E,N]
 
     if mode == "kernel":
@@ -84,14 +93,16 @@ def mamba_forward(x, p, scfg: SSMConfig, *, chunk: int = 64,
                                    B_in.astype(jnp.float32),
                                    C_in.astype(jnp.float32),
                                    xs.astype(jnp.float32), A)
-        return _finish(ys2, xs, xs_raw, z, x, p, B, E, h_fin, return_state)
+        return _finish(ys2, xs, xs_raw, z, x, p, B, E, h_fin, return_state,
+                       lengths=lengths)
     if mode == "stub":
         # kernel-footprint stand-in: reads dt/B/C/x once, writes y once
         ys2 = (dt.astype(jnp.float32) * xs.astype(jnp.float32)
                * jnp.sum(B_in.astype(jnp.float32) * C_in.astype(jnp.float32),
                          axis=-1, keepdims=True))
         h_fin = jnp.zeros((B, E, N), jnp.float32)
-        return _finish(ys2, xs, xs_raw, z, x, p, B, E, h_fin, return_state)
+        return _finish(ys2, xs, xs_raw, z, x, p, B, E, h_fin, return_state,
+                       lengths=lengths)
 
     Lc = min(chunk, S)
     n_chunks = math.ceil(S / Lc)
@@ -123,18 +134,29 @@ def mamba_forward(x, p, scfg: SSMConfig, *, chunk: int = 64,
     else:
         h_fin, ys = jax.lax.scan(chunk_body, h0, (dtc, Bc, Cc, xc))
     y = ys.swapaxes(0, 1).reshape(B, n_chunks * Lc, E)[:, :S]
-    return _finish(y, xs, xs_raw, z, x, p, B, E, h_fin, return_state)
+    return _finish(y, xs, xs_raw, z, x, p, B, E, h_fin, return_state,
+                   lengths=lengths)
 
 
-def _finish(y, xs, xs_raw, z, x, p, B, E, h_fin, return_state):
-    """Shared mamba epilogue: skip term, gate, out-projection, state."""
+def _finish(y, xs, xs_raw, z, x, p, B, E, h_fin, return_state, lengths=None):
+    """Shared mamba epilogue: skip term, gate, out-projection, state.
+
+    ``lengths``: per-row valid length (right-padded prefill) — the conv
+    history buffer then holds each row's last K-1 *valid* inputs."""
     y = y + xs.astype(jnp.float32) * p["D"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
     if return_state:
         K = p["conv_w"].shape[0]
         pad = jnp.zeros((B, K - 1, E), xs_raw.dtype)
-        conv_buf = jnp.concatenate([pad, xs_raw], axis=1)[:, -(K - 1):]
+        xp = jnp.concatenate([pad, xs_raw], axis=1)  # [B, K-1+S, E]
+        if lengths is None:
+            conv_buf = xp[:, -(K - 1):]
+        else:
+            # xp[b, len_b + j] = xs_raw[b, len_b + j - (K-1)], zeros for j
+            # reaching before the sequence start
+            idx = lengths[:, None] + jnp.arange(K - 1)[None, :]
+            conv_buf = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
         return out, (conv_buf, h_fin)
     return out
 

@@ -37,6 +37,10 @@ class ShardCtx:
     online_attn: bool = False   # flash-style online-softmax attention
     kv_block: int = 512         # KV block for online_attn
     mamba_mode: str = "scan"    # scan | kernel | stub (see ssm.mamba_forward)
+    # decode-attention route (layers.resolve_decode_backend): "auto" runs the
+    # Pallas flash-decode kernel when the layout supports it (interpret mode
+    # off-TPU), "ref" the grouped jnp path (the only sharded-mesh choice)
+    decode_backend: str = "auto"  # auto | pallas | ref
 
     @property
     def dp_size(self) -> int:
@@ -80,11 +84,15 @@ DEFAULT_CTX = ShardCtx()
 
 
 def _sinusoid(S, D, offset=0):
-    pos = (jnp.arange(S, dtype=jnp.float32) + offset)[:, None]
-    dim = jnp.arange(0, D, 2, dtype=jnp.float32)[None, :]
-    ang = pos / jnp.power(10_000.0, dim / D)
+    """[..., S, D] sinusoidal table; ``offset`` is a scalar or a per-row [B]
+    vector (continuous-batching decode, where every slot sits at its own
+    absolute position)."""
+    off = jnp.asarray(offset, jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.float32) + off[..., None]  # [..., S]
+    dim = jnp.arange(0, D, 2, dtype=jnp.float32)
+    ang = pos[..., None] / jnp.power(10_000.0, dim / D)
     pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
-    return pe[:, :D]
+    return pe[..., :D]
 
 
 def _maybe_posenc(x, cfg, offset=0):
@@ -146,7 +154,9 @@ def _mixer_fwd(x, lp, mixer, cfg, ctx, positions, enc_kv):
     return x
 
 
-def _ffn_fwd(x, lp, ffn, cfg, ctx):
+def _ffn_fwd(x, lp, ffn, cfg, ctx, token_valid=None):
+    """``token_valid``: decode-time [B] mask keeping inactive slots out of
+    MoE capacity dispatch (see moe.moe_dense_ref)."""
     aux = jnp.zeros((), jnp.float32)
     if ffn == "none":
         return x, aux
@@ -154,7 +164,7 @@ def _ffn_fwd(x, lp, ffn, cfg, ctx):
     if ffn == "dense":
         y = L.mlp(h, lp, cfg)
     else:
-        y, aux = MOE.moe_ffn(h, lp, cfg.moe, cfg.act, ctx)
+        y, aux = MOE.moe_ffn(h, lp, cfg.moe, cfg.act, ctx, valid=token_valid)
     if cfg.post_norms and "post_norm2" in lp:
         y = L.apply_norm(y, lp["post_norm2"], cfg.norm, cfg.norm_eps)
     return x + y, aux

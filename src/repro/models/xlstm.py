@@ -54,8 +54,14 @@ def _mlstm_parallel(q, k, v, logi, logf, block: int = 0, unroll: bool = False):
 
 
 def mlstm_forward(x, p, xcfg: XLSTMConfig, *, block: int = 0,
-                  return_state: bool = False, unroll: bool = False):
-    """mLSTM block. x: [B,S,D] -> [B,S,D]."""
+                  return_state: bool = False, unroll: bool = False,
+                  valid=None):
+    """mLSTM block. x: [B,S,D] -> [B,S,D].
+
+    ``valid``: [B,S] bool for right-padded prefill.  Invalid steps get
+    input gate 0 (logi = -1e30) and forget gate 1 (logf = 0), so they
+    contribute nothing to the matrix memory and the final (C, n, m) state
+    equals the state after the last valid token."""
     B, S, D = x.shape
     H = xcfg.n_heads
     up = jnp.einsum("bsd,de->bse", x, p["up_proj"])
@@ -68,6 +74,9 @@ def mlstm_forward(x, p, xcfg: XLSTMConfig, *, block: int = 0,
     logi = jnp.einsum("bse,eh->bsh", xi.astype(jnp.float32), p["w_i"]) + p["b_i"]
     logf = jax.nn.log_sigmoid(
         jnp.einsum("bse,eh->bsh", xi.astype(jnp.float32), p["w_f"]) + p["b_f"])
+    if valid is not None:
+        logi = jnp.where(valid[..., None], logi, -1e30)
+        logf = jnp.where(valid[..., None], logf, 0.0)
     h = _mlstm_parallel(q, k, v, logi, logf, block=block, unroll=unroll)
     # per-head group norm
     hf = h.astype(jnp.float32)
@@ -146,8 +155,12 @@ def _slstm_cell(carry, gates_x, R, heads):
     return (c_new, n_new, h_new, m_new)
 
 
-def slstm_forward(x, p, xcfg: XLSTMConfig, *, return_state: bool = False):
-    """sLSTM block. x: [B,S,D] -> [B,S,D]."""
+def slstm_forward(x, p, xcfg: XLSTMConfig, *, return_state: bool = False,
+                  valid=None):
+    """sLSTM block. x: [B,S,D] -> [B,S,D].
+
+    ``valid``: [B,S] bool for right-padded prefill; invalid steps carry the
+    previous (c, n, h, m) state through unchanged."""
     B, S, D = x.shape
     H = xcfg.n_heads
     E = p["w_gates"].shape[1] // 4
@@ -155,12 +168,23 @@ def slstm_forward(x, p, xcfg: XLSTMConfig, *, return_state: bool = False):
                + p["b_gates"])  # [B,S,4E]
     R = p["r_gates"]  # [H, dh, 4, dh]
 
-    def step(carry, g):
-        new = _slstm_cell(carry, g, R, H)
-        return new, new[2]
-
     init = tuple(jnp.zeros((B, E), jnp.float32) for _ in range(4))
-    fin, hs = jax.lax.scan(step, init, gates_x.swapaxes(0, 1))
+    if valid is None:
+        def step(carry, g):
+            new = _slstm_cell(carry, g, R, H)
+            return new, new[2]
+
+        fin, hs = jax.lax.scan(step, init, gates_x.swapaxes(0, 1))
+    else:
+        def step(carry, inp):
+            g, vt = inp
+            new = _slstm_cell(carry, g, R, H)
+            new = tuple(jnp.where(vt[:, None], nn, oo)
+                        for nn, oo in zip(new, carry))
+            return new, new[2]
+
+        fin, hs = jax.lax.scan(step, init, (gates_x.swapaxes(0, 1),
+                                            valid.swapaxes(0, 1)))
     h = hs.swapaxes(0, 1)  # [B,S,E]
     # gated up/down projection (proj factor 4/3)
     u = jnp.einsum("bse,ef->bsf", h.astype(x.dtype), p["up_proj"])

@@ -1,1 +1,2 @@
-from repro.serving.engine import ServeEngine, generate
+from repro.serving.engine import (CompileCache, ContinuousBatchingEngine,
+                                  ServeEngine, generate)

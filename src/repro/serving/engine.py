@@ -1,54 +1,165 @@
-"""Batched serving engine: prefill + greedy/temperature decode loop.
+"""Serving engines: compile-cached generation and continuous batching.
+
+Two layers:
+
+* :func:`generate` + :class:`ServeEngine` — the naive flush engine kept as
+  the benchmark baseline: collect requests, right-pad to a bucket, run one
+  prefill + a fixed-length decode scan for the whole batch (every request
+  rides to ``max(max_new_tokens)``).
+* :class:`ContinuousBatchingEngine` — fixed-capacity decode *slots* over one
+  shared cache: per-request prefill (bucketed, compile-cached) inserts a
+  request into a free slot mid-decode, every decode step advances all active
+  slots in a single compiled call, and finished slots retire early (their
+  state frozen via ``decode_step(active=...)``) and free capacity for queued
+  requests.
+
+Correctness contract (regression-tested per arch): right-padded batched
+generation with explicit per-sequence ``lengths`` produces the same greedy
+tokens as running each request alone — see ``models/decode.prefill``.
+
+All jitted callables are hoisted out of the per-flush path and cached by
+shape key, so steady-state serving never re-traces (the compile-hit
+counters are asserted in tests).
 
 ``decode_32k`` / ``long_500k`` dry-run shapes lower :func:`step_fn` (one
-token against a seq_len cache); this module provides the runnable engine for
-the small-scale demos and tests.
+token against a seq_len cache); this module provides the runnable engine
+for the small-scale demos, benchmarks, and tests.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, Hashable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import decode as D
 from repro.models.model import Model
 
 
-def generate(model: Model, params, batch: Dict, max_new_tokens: int,
-             S_max: int = 0, temperature: float = 0.0, key=None):
-    """Prefill the prompt then decode ``max_new_tokens`` greedily (or with
-    temperature sampling).  Returns int32 [B, max_new_tokens]."""
-    prompt = batch["tokens"]
-    B, S = prompt.shape
-    extra = (model.cfg.n_patches
-             if model.cfg.frontend == "vision_stub" else 0)
-    S_max = S_max or (S + extra + max_new_tokens)
-    logits, cache = model.prefill(params, batch, S_max=S_max)
-    key = key if key is not None else jax.random.key(0)
+def _frontend_stub(cfg, B: int) -> Dict:
+    """Zero frontend embeddings for token-only serving requests."""
+    extras = {}
+    if cfg.frontend == "vision_stub":
+        extras["patch_embeds"] = jnp.zeros((B, cfg.n_patches, cfg.d_model),
+                                           jnp.float32)
+    if cfg.frontend == "audio_stub":
+        nf = cfg.encoder.n_frames
+        extras["audio_embeds"] = jnp.zeros((B, nf, cfg.d_model), jnp.float32)
+    return extras
+
+
+def _frontend_extra(cfg) -> int:
+    return cfg.n_patches if cfg.frontend == "vision_stub" else 0
+
+
+# ------------------------------------------------------------- generate ----
+def _model_jit_cache(model: Model) -> Dict:
+    """Per-model cache of jitted serving callables.
+
+    Stored on the Model instance (not a module-global lru) so the compiled
+    executables live exactly as long as the model they close over."""
+    cache = getattr(model, "_serve_jit_cache", None)
+    if cache is None:
+        cache = model._serve_jit_cache = {}
+    return cache
+
+
+def _prefill_jit(model: Model, S_max: int):
+    """Jitted prefill for (model, S_max); jit's own cache keys the batch
+    shapes and the lengths=None/array treedef."""
+    cache = _model_jit_cache(model)
+    key = ("prefill", S_max)
+    if key not in cache:
+        cache[key] = jax.jit(lambda params, batch, lengths: model.prefill(
+            params, batch, S_max=S_max, lengths=lengths))
+    return cache[key]
+
+
+def _decode_loop(model: Model, temperature: float, n_steps: int):
+    """Jitted fixed-length decode scan for (model, temperature, n_steps).
+
+    Hoisted out of :func:`generate` so repeated calls at identical shapes
+    reuse one jit cache entry instead of re-tracing a fresh closure per
+    call (the per-flush recompile bug)."""
+    cache = _model_jit_cache(model)
+    key = ("decode_loop", temperature, n_steps)
+    if key in cache:
+        return cache[key]
 
     def pick(logits, key):
         if temperature > 0:
             return jax.random.categorical(key, logits / temperature, axis=-1)
         return jnp.argmax(logits, axis=-1)
 
-    @jax.jit
-    def step(carry, _):
-        logits, cache, key = carry
-        key, sub = jax.random.split(key)
-        tok = pick(logits, sub).astype(jnp.int32)
-        logits, cache = model.decode_step(params, tok, cache)
-        return (logits, cache, key), tok
+    def run(params, logits, cache, key):
+        def step(carry, _):
+            logits, cache, key = carry
+            key, sub = jax.random.split(key)
+            tok = pick(logits, sub).astype(jnp.int32)
+            logits, cache = model.decode_step(params, tok, cache)
+            return (logits, cache, key), tok
 
-    (_, cache, _), toks = jax.lax.scan(step, (logits, cache, key),
-                                       None, length=max_new_tokens)
+        (_, cache, _), toks = jax.lax.scan(step, (logits, cache, key),
+                                           None, length=n_steps)
+        return toks
+
+    fn = cache[key] = jax.jit(run)
+    return fn
+
+
+def generate(model: Model, params, batch: Dict, max_new_tokens: int,
+             S_max: int = 0, temperature: float = 0.0, key=None,
+             lengths=None):
+    """Prefill the prompt then decode ``max_new_tokens`` greedily (or with
+    temperature sampling).  Returns int32 [B, max_new_tokens].
+
+    ``lengths``: per-row valid token counts for right-padded batches (see
+    ``models/decode.prefill``)."""
+    prompt = batch["tokens"]
+    B, S = prompt.shape
+    S_max = S_max or (S + _frontend_extra(model.cfg) + max_new_tokens)
+    logits, cache = _prefill_jit(model, S_max)(params, batch, lengths)
+    key = key if key is not None else jax.random.key(0)
+    toks = _decode_loop(model, float(temperature),
+                        int(max_new_tokens))(params, logits, cache, key)
     return toks.swapaxes(0, 1)  # [B, T]
 
 
+# ------------------------------------------------------- compile cache -----
+class CompileCache:
+    """Shape-keyed cache of jitted callables with hit/miss counters.
+
+    The counters are the steady-state guarantee: once every shape bucket
+    has been seen, ``misses`` must stop growing (asserted in tests)."""
+
+    def __init__(self):
+        self._fns: Dict[Hashable, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Hashable, build: Callable[[], Callable]) -> Callable:
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = self._fns[key] = build()
+        else:
+            self.hits += 1
+        return fn
+
+    @property
+    def n_entries(self) -> int:
+        return len(self._fns)
+
+
+# ------------------------------------------------------- naive engine ------
 class ServeEngine:
-    """Minimal batched-request engine: collects requests up to a batch size,
-    pads prompts to a bucket, runs prefill+decode."""
+    """Minimal batched-request engine (the naive baseline): collects
+    requests up to a batch size, right-pads prompts to a bucket, runs one
+    prefill + fixed-length decode for the whole batch."""
 
     def __init__(self, model: Model, params, max_batch: int = 8,
                  bucket: int = 64):
@@ -68,22 +179,274 @@ class ServeEngine:
         while self.queue:
             chunk, self.queue = (self.queue[:self.max_batch],
                                  self.queue[self.max_batch:])
-            S = max(len(t) for t, _ in chunk)
-            S = ((S + self.bucket - 1) // self.bucket) * self.bucket
+            lens = [len(t) for t, _ in chunk]
+            S = ((max(lens) + self.bucket - 1) // self.bucket) * self.bucket
             new = max(m for _, m in chunk)
             toks = np.zeros((len(chunk), S), np.int32)
             for i, (t, _) in enumerate(chunk):
-                toks[i, S - len(t):] = t  # left-pad
-            batch = {"tokens": jnp.asarray(toks)}
-            if self.model.cfg.frontend == "vision_stub":
-                batch["patch_embeds"] = jnp.zeros(
-                    (len(chunk), self.model.cfg.n_patches,
-                     self.model.cfg.d_model), jnp.float32)
-            if self.model.cfg.frontend == "audio_stub":
-                nf = self.model.cfg.encoder.n_frames
-                batch["audio_embeds"] = jnp.zeros(
-                    (len(chunk), nf, self.model.cfg.d_model), jnp.float32)
-            gen = generate(self.model, self.params, batch, new)
+                toks[i, :len(t)] = t  # right-pad; masked via lengths
+            batch = {"tokens": jnp.asarray(toks),
+                     **_frontend_stub(self.model.cfg, len(chunk))}
+            gen = generate(self.model, self.params, batch, new,
+                           lengths=jnp.asarray(lens, jnp.int32))
             for i, (_, m) in enumerate(chunk):
                 out.append(np.asarray(gen[i, :m]))
         return out
+
+
+# ------------------------------------------- continuous-batching engine ----
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    remaining: int = 0
+    t_submit: float = 0.0
+    t_first: Optional[float] = None  # first-token wall time (TTFT end)
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching over one fixed-capacity cache.
+
+    * ``max_slots`` decode slots share a [max_slots, S_max] cache; each slot
+      tracks its own position (``cache['pos']`` is per-row).
+    * Admission: a queued request prefills alone (prompt right-padded to a
+      ``bucket`` multiple, exact length passed through) and is inserted
+      into a free slot — including slots freed mid-decode.
+    * One compiled decode *burst* advances every active slot by
+      ``min(remaining)`` tokens (bounded to a fixed ladder of scan lengths
+      so the compile cache stays finite).  Budgets are host-known, so no
+      slot can finish mid-burst and no admission opportunity is missed —
+      burst scheduling is semantically identical to stepping one token at
+      a time, without a host round-trip per token.
+    * Finished slots exit early (state frozen via
+      ``decode_step(active=...)``) instead of riding to the batch maximum.
+    * All jitted functions live in a :class:`CompileCache`; at steady state
+      (all prompt buckets seen) no call re-traces.
+
+    ``decode_backend`` selects the decode-attention route
+    ("pallas" | "ref" | "auto", see ``models/layers.resolve_decode_backend``).
+    """
+
+    BURSTS = (32, 24, 16, 12, 8, 6, 4, 3, 2, 1)  # compiled scan lengths
+
+    def __init__(self, model: Model, params, max_slots: int = 4,
+                 S_max: int = 128, bucket: int = 16,
+                 decode_backend: str = "auto", temperature: float = 0.0,
+                 seed: int = 0):
+        self.model = model
+        self.cfg = model.cfg
+        self.ctx = dataclasses.replace(model.ctx,
+                                       decode_backend=decode_backend)
+        self.params = params
+        self.max_slots = max_slots
+        self.S_max = S_max
+        self.bucket = bucket
+        self.temperature = temperature
+        dtype = params["embed"].dtype
+        self.cache = D.init_cache(self.cfg, max_slots, S_max, dtype=dtype)
+        self.last_logits = jnp.zeros((max_slots, self.cfg.vocab), jnp.float32)
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.pending: deque = deque()
+        self.done: Dict[int, Request] = {}
+        self.compile_cache = CompileCache()
+        self._next_rid = 0
+        self._key = jax.random.key(seed)
+        self.n_decode_steps = 0
+        # bursts whose token values haven't been fetched yet: scheduling
+        # never reads token *values*, so fetches defer until a TTFT needs
+        # recording or results are collected — deferred bursts pipeline
+        # on-device without a host round-trip each
+        self._deferred: List = []
+
+    # ---------------------------------------------------------- submit ----
+    def submit(self, tokens: np.ndarray, max_new_tokens: int = 16) -> int:
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {max_new_tokens}")
+        budget = self.S_max - _frontend_extra(self.cfg) - max_new_tokens
+        if len(tokens) > budget:
+            raise ValueError(
+                f"prompt of {len(tokens)} tokens + {max_new_tokens} new "
+                f"exceeds S_max={self.S_max}")
+        req = Request(rid=self._next_rid, tokens=tokens,
+                      max_new_tokens=max_new_tokens,
+                      remaining=max_new_tokens, t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.pending.append(req)
+        return req.rid
+
+    # ------------------------------------------------- jitted builders ----
+    def _prefill_fn(self, S_pad: int, g: int):
+        """Fused prefill-into-slots: one compiled call per (prompt bucket,
+        group size) right-pad-prefills ``g`` requests together AND scatters
+        their caches/logits into their slots — admission costs one dispatch
+        per group and the sub-cache never round-trips through host-visible
+        buffers.  Keys are bounded: g <= max_slots, buckets <= S_max/bucket.
+        """
+        cfg, ctx, S_max = self.cfg, self.ctx, self.S_max
+
+        def build():
+            def fn(params, tokens, lengths, cache, last_logits, slots):
+                batch = {"tokens": tokens, **_frontend_stub(cfg, g)}
+                logits, sub = D.prefill(params, batch, cfg, ctx, S_max=S_max,
+                                        lengths=lengths)
+
+                def ins(big, small):
+                    return big.at[:, slots].set(small.astype(big.dtype))
+
+                stack = jax.tree.map(ins, cache["stack"], sub["stack"])
+                pos = cache["pos"].at[slots].set(sub["pos"])
+                ll = last_logits.at[slots].set(logits)
+                return {"stack": stack, "pos": pos}, ll
+            return jax.jit(fn)
+
+        return self.compile_cache.get(("prefill", S_pad, g), build)
+
+    def _decode_fn(self, n_steps: int, tailed: bool):
+        """Compiled decode burst of ``n_steps``.
+
+        ``tailed=False`` (the queue-limited case, burst <= min remaining):
+        no slot can exhaust its budget mid-burst, so the scan carries no
+        per-step activity masking — each step costs exactly a naive decode
+        step.  ``tailed=True`` (the drain case): slot b freezes once
+        ``i >= remaining[b]``, exactly as if stepped one token at a time,
+        so short slots retire device-side while long ones run on."""
+        cfg, ctx, temperature = self.cfg, self.ctx, self.temperature
+
+        sampled = temperature > 0
+
+        def build():
+            # signature varies with the variant so the hot greedy/uniform
+            # path ships no dead operands (each transfer costs real time at
+            # tiny-model step granularity)
+            def fn(params, last_logits, cache, remaining=None, key=None):
+                def step(carry, i):
+                    logits, cache, key = carry
+                    if sampled:
+                        key, sub = jax.random.split(key)
+                        tok = jax.random.categorical(
+                            sub, logits / temperature, axis=-1)
+                    else:
+                        tok = jnp.argmax(logits, axis=-1)
+                    tok = tok.astype(jnp.int32)
+                    active = (i < remaining) if tailed else None
+                    logits, cache = D.decode_step(params, tok, cache, cfg,
+                                                  ctx, active=active)
+                    return (logits, cache, key), tok
+
+                (logits, cache, _), toks = jax.lax.scan(
+                    step, (last_logits, cache, key), jnp.arange(n_steps))
+                return toks, logits, cache  # toks: [n_steps, B]
+            return jax.jit(fn)
+
+        return self.compile_cache.get(("decode", n_steps, tailed), build)
+
+    # ------------------------------------------------------------ step ----
+    def _admit(self):
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        take = min(len(free), len(self.pending))
+        if not take:
+            return
+        items = [(self.pending.popleft(), free[i]) for i in range(take)]
+        # one prefill per admission wave: everyone pads to the wave's
+        # largest bucket (dispatch count beats the few wasted pad columns;
+        # right-pad masking keeps the extra columns semantically inert)
+        g = len(items)
+        S_pad = max(-(-max(len(req.tokens), 1) // self.bucket) * self.bucket
+                    for req, _ in items)
+        toks = np.zeros((g, S_pad), np.int32)
+        for i, (req, _) in enumerate(items):
+            toks[i, :len(req.tokens)] = req.tokens
+        lengths = np.array([len(r.tokens) for r, _ in items], np.int32)
+        slots = np.array([s for _, s in items], np.int32)
+        self.cache, self.last_logits = self._prefill_fn(S_pad, g)(
+            self.params, jnp.asarray(toks), jnp.asarray(lengths),
+            self.cache, self.last_logits, jnp.asarray(slots))
+        for req, slot in items:
+            self.slots[slot] = req
+
+    def step(self) -> bool:
+        """Admit pending requests into free slots, then advance every
+        active slot by one decode burst.  Returns False when drained.
+
+        While requests are queued, the burst stops at the smallest
+        remaining budget so a freed slot admits immediately; once the
+        queue is empty there is nothing to admit, so the burst runs to the
+        *largest* remaining budget and slots retire device-side mid-burst
+        (``active = i < remaining`` inside the scan)."""
+        self._admit()
+        reqs = [r for r in self.slots if r is not None]
+        if not reqs:
+            return False
+        lo = min(r.remaining for r in reqs)
+        k = lo if self.pending else max(r.remaining for r in reqs)
+        burst = next(b for b in self.BURSTS if b <= k)
+        # the cheap uniform burst (no per-step masking) requires every slot
+        # live for the whole burst: no budget runs out mid-burst AND no
+        # empty slot decodes placeholder tokens (which must stay masked out
+        # of MoE capacity dispatch)
+        tailed = burst > lo or len(reqs) < self.max_slots
+        kwargs = {}
+        if tailed:
+            kwargs["remaining"] = jnp.asarray(
+                np.array([r.remaining if r is not None else 0
+                          for r in self.slots], np.int32))
+        if self.temperature > 0:
+            self._key, kwargs["key"] = jax.random.split(self._key)
+        toks, self.last_logits, self.cache = self._decode_fn(burst, tailed)(
+            self.params, self.last_logits, self.cache, **kwargs)
+        self.n_decode_steps += burst
+        first_timers = any(r is not None and r.t_first is None
+                           for r in self.slots)
+        takes = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            take = min(burst, req.remaining)
+            takes.append((req, slot, take))
+            req.remaining -= take
+            if req.remaining == 0:
+                self.done[req.rid] = req
+                self.slots[slot] = None  # early exit: slot freed mid-decode
+        self._deferred.append((toks, takes))
+        if first_timers:
+            self._collect()  # block now: these requests' TTFT ends here
+        return True
+
+    def _collect(self):
+        """Materialize deferred burst tokens (blocks on the device)."""
+        for toks, takes in self._deferred:
+            toks_np = np.asarray(toks)  # [burst, B]
+            now = time.perf_counter()
+            for req, slot, take in takes:
+                if req.t_first is None:
+                    req.t_first = now
+                req.out.extend(int(t) for t in toks_np[:take, slot])
+        self._deferred.clear()
+
+    def run(self) -> List[np.ndarray]:
+        """Drain queue + slots; returns the tokens of requests completed by
+        THIS call, in submit order (a reused engine keeps earlier waves in
+        ``self.done`` for stats but does not return them again)."""
+        already = set(self.done)
+        while self.step():
+            pass
+        self._collect()
+        return [np.asarray(self.done[rid].out, np.int32)
+                for rid in sorted(self.done) if rid not in already]
+
+    # ------------------------------------------------------------ stats ----
+    @property
+    def stats(self) -> Dict[str, float]:
+        reqs = self.done.values()
+        ttfts = [r.t_first - r.t_submit for r in reqs if r.t_first is not None]
+        return {
+            "completed": len(self.done),
+            "decode_steps": self.n_decode_steps,
+            "compile_hits": self.compile_cache.hits,
+            "compile_misses": self.compile_cache.misses,
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+        }

@@ -1,0 +1,69 @@
+"""FederatedZO accounting with the multi-direction estimator: clients
+upload T*K scalars (not T), and GradIP trajectories reduce the [T, K] gs
+to one scalar per local step instead of crashing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.configs.tiny import TINY
+from repro.core import random_mask
+from repro.core.server import Client, FederatedZO, _per_step
+from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset
+from repro.models import Model
+
+
+def _setup(n_dirs: int, T: int = 2, n_clients: int = 2):
+    spec = TaskSpec(vocab=min(TINY.vocab, 512))
+    model = Model(TINY)
+    params = model.init(jax.random.key(0))
+    loss, _, _ = make_task_fns(model, spec)
+    space = random_mask(params, density=1e-2, seed=0, balanced=False)
+    fl = FLConfig(n_clients=n_clients, local_steps=T, batch_size=2,
+                  n_dirs=n_dirs)
+    clients = [Client(i, sample_dataset(spec, 8, seed=i), 2)
+               for i in range(n_clients)]
+    return FederatedZO(loss, params, space, fl, clients), space
+
+
+def test_per_step_reduction():
+    np.testing.assert_allclose(_per_step(np.arange(3.0)), np.arange(3.0))
+    g = np.arange(6.0).reshape(2, 3)
+    np.testing.assert_allclose(_per_step(g), g.mean(axis=1))
+
+
+def test_multi_dir_round_bytes_and_gradip():
+    srv, space = _setup(n_dirs=3, T=2, n_clients=2)
+    gp = jnp.full((space.n,), 0.01, jnp.float32)
+    gs = srv.run_round(gp_vec=gp)
+    assert gs[0].shape == (2, 3)  # [T, K] scalars uploaded
+    # up bytes count every scalar: 2 clients * T*K * 4 bytes
+    assert srv.comm.up_bytes == 2 * 2 * 3 * 4
+    for cid in (0, 1):
+        (ips,) = srv.gradip_log[cid]
+        assert ips.shape == (2,)  # one GradIP per local step
+        assert np.isfinite(ips).all()
+
+
+def test_multi_dir_calibration():
+    srv, space = _setup(n_dirs=2, T=2)
+    gp = jnp.full((space.n,), 0.01, jnp.float32)
+    results, flagged, trajs = srv.calibrate_vp(gp, T_cali=2)
+    assert len(trajs) == 2
+    assert all(t.shape == (2,) and np.isfinite(t).all() for t in trajs)
+
+
+def test_single_dir_bytes_unchanged():
+    srv, space = _setup(n_dirs=1, T=2, n_clients=2)
+    srv.run_round()
+    assert srv.comm.up_bytes == 2 * 2 * 4  # 2 clients * T scalars * 4 bytes
+
+
+def test_high_freq_down_bytes_count_directions():
+    """High-frequency broadcast must carry all T*K per-direction scalars:
+    the virtual-path replay needs every g_tk, not one scalar per step."""
+    srv, _ = _setup(n_dirs=4, T=1, n_clients=2)  # T=1 -> high_freq on
+    assert srv.high_freq
+    srv.run_round()
+    assert srv.comm.down_bytes == 2 * (4 * 1 * 4 + 8)
+    assert srv.comm.up_bytes == 2 * 1 * 4 * 4
