@@ -184,6 +184,19 @@ class FlatBacking:
             return flat[:self.n_flat].astype(jnp.float32)
         return flat[self.global_index].astype(jnp.float32)
 
+    def scatter_into(self, buf, vec):
+        """Overwrite the space's coordinates of a dense [n_pad] f32 buffer
+        with ``vec`` [n].  Equivalent to :meth:`expand` whenever ``buf`` is
+        zero off the coordinates (the coordinate set is static, so every
+        overwrite leaves the off-coordinate zeros untouched) — without
+        re-materializing the n_pad zero vector.  The scanned hot loops
+        carry one dense z buffer and refresh it in place each step, saving
+        a full-vector write per step."""
+        v = vec.astype(jnp.float32)
+        if self.identity:
+            return jax.lax.dynamic_update_slice(buf, v, (0,))
+        return buf.at[self.global_index].set(v)
+
 
 def _layout_key(template):
     leaves, treedef = jax.tree_util.tree_flatten(template)

@@ -77,6 +77,104 @@ def make_fl_train_step(per_example_loss: Callable, space, *, eps: float,
     return step
 
 
+# Below this many backed parameters the per-step cost is dominated by op
+# dispatch, and stacking (w+, w-) into one vmapped forward halves the
+# dispatch count; above it the forwards are compute/memory-bound and the
+# 2x-batch stacked matmuls lose to two sequential forwards (measured on
+# both bench arches: tiny wants stacked, qwen3-4b-reduced wants
+# sequential — BENCH_zo_step.json).
+STACK_FORWARDS_MAX_PARAMS = 1 << 20
+
+
+def make_fl_train_loop(per_example_loss: Callable, space, *, eps: float,
+                       lr: float, n_clients: int, n_steps: int,
+                       backend: Optional[str] = None,
+                       stack_forwards: Optional[bool] = None):
+    """``n_steps`` T=1 high-frequency MEERKAT steps in one jitted scan —
+    the compiled training burst (the serving engine's decode-burst idea
+    applied to the train loop: no host round-trip per step).
+
+    Returns jittable (params, key, batches) -> (params', g_clients
+    [n_steps, K], metrics), with batches carrying a leading [n_steps, ...]
+    axis.  Semantically identical to folding :func:`make_fl_train_step`
+    over the batches.
+
+    On the fused route the flat parameter vector is built ONCE before the
+    scan and carried dense across it — the per-step
+    ``backing.flatten(params)`` / tile re-padding round-trip that repeated
+    single-step calls pay (and that inverted the e2e fused-vs-naive
+    comparison on qwen3_4b in BENCH_zo_step) is hoisted; each scanned step
+    is exactly one fused dual-perturb pass, the two forwards, and one
+    fused update pass.  For sharded meshes use :func:`make_fl_train_step`
+    (per-step ``constrain_params``) instead.
+
+    ``stack_forwards`` picks how the fused route evaluates the (w+, w-)
+    pair: True stacks both into one vmapped 2x-batch forward (halves op
+    dispatch — wins when the model is small enough that dispatch dominates),
+    False runs two sequential forwards (wins once the forwards are
+    compute-bound and the 2x-batch matmuls stop fitting cache).  None
+    auto-selects by backed-parameter count (STACK_FORWARDS_MAX_PARAMS)."""
+
+    def loop(params, key, batches):
+        backing = get_backing(space, params)
+        keys = jax.random.split(key, n_steps)
+
+        def g_of(l_plus, l_minus):
+            return (l_plus - l_minus).reshape(n_clients, -1).mean(-1) \
+                / (2.0 * eps)
+
+        if resolve_backend(backend, backing) == "ref":
+            def one(p, inp):
+                k, b = inp
+                z = space.sample_z(k)
+                w_plus = space.add(p, eps * z)
+                l_plus = per_example_loss(w_plus, b)
+                w_minus = space.add(w_plus, (-2.0 * eps) * z)
+                l_minus = per_example_loss(w_minus, b)
+                g_cl = g_of(l_plus, l_minus)
+                g = jnp.mean(g_cl)
+                new_p = space.add(w_minus, (eps - lr * g) * z)
+                return new_p, (g_cl, (l_plus + l_minus).mean() / 2.0)
+
+            p_T, (gs, losses) = jax.lax.scan(one, params, (keys, batches))
+            return p_T, gs, {"loss": losses[-1], "g": gs[-1].mean()}
+
+        w0 = backing.flatten(params)  # hoisted: once per burst, not per step
+        # one dense z buffer carried across the burst: the coordinate set
+        # is static, so each step overwrites only the sparse values in
+        # place instead of re-materializing n_pad zeros (scatter_into)
+        z0 = jnp.zeros((backing.n_pad,), jnp.float32)
+        stack = (backing.n_flat <= STACK_FORWARDS_MAX_PARAMS
+                 if stack_forwards is None else stack_forwards)
+
+        def one(carry, inp):
+            w_flat, z_buf = carry
+            k, b = inp
+            z_flat = backing.scatter_into(z_buf, space.sample_z(k))
+            wp, wm = zo_dual_perturb_flat(w_flat, z_flat, None, eps)
+            if stack:
+                # one vectorized forward over the stacked (w+, w-) pair:
+                # identical math (vmap), half the per-step op dispatches on
+                # the loss side — the small-model bottleneck the flat route
+                # pays twice
+                both = jax.vmap(per_example_loss, in_axes=(0, None))(
+                    jax.vmap(backing.unflatten)(jnp.stack([wp, wm])), b)
+                l_plus, l_minus = both[0], both[1]
+            else:
+                l_plus = per_example_loss(backing.unflatten(wp), b)
+                l_minus = per_example_loss(backing.unflatten(wm), b)
+            g_cl = g_of(l_plus, l_minus)
+            g = jnp.mean(g_cl)
+            new_w = zo_fused_update_flat(w_flat, z_flat, None, -lr * g)
+            return (new_w, z_flat), (g_cl, (l_plus + l_minus).mean() / 2.0)
+
+        (w_T, _), (gs, losses) = jax.lax.scan(one, (w0, z0), (keys, batches))
+        return (backing.unflatten(w_T), gs,
+                {"loss": losses[-1], "g": gs[-1].mean()})
+
+    return loop
+
+
 def make_fl_round_step(loss_fn: Callable, space, *, eps: float, lr: float,
                        T: int, backend: Optional[str] = None):
     """Full MEERKAT round with T>1 local steps and vmapped clients.

@@ -31,10 +31,12 @@ def gradip_trajectory(space, keys, gs, gp_vec):
 
 def pretrain_gradient_vec(loss_fn, params, space, batches):
     """Server-held pre-training gradient restricted to the space: [n]."""
+    from repro.models.layers import differentiable_attn
     grad_fn = jax.jit(jax.grad(loss_fn))
     acc = jnp.zeros((space.n,), jnp.float32)
     n = 0
     for b in batches:
-        acc = acc + space.slice(grad_fn(params, b))
+        with differentiable_attn():  # no VJP on the pallas attn route
+            acc = acc + space.slice(grad_fn(params, b))
         n += 1
     return acc / max(n, 1)

@@ -23,11 +23,13 @@ def _n_select(total: int, density: float) -> int:
 
 def sensitivity_scores(loss_fn: Callable, params, batches: Iterable):
     """Average squared per-parameter gradient over pre-training batches."""
+    from repro.models.layers import differentiable_attn
     grad_fn = jax.jit(jax.grad(loss_fn))
     acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     n = 0
     for batch in batches:
-        g = grad_fn(params, batch)
+        with differentiable_attn():  # no VJP on the pallas attn route
+            g = grad_fn(params, batch)
         acc = jax.tree.map(lambda a, gg: a + jnp.square(gg.astype(jnp.float32)),
                            acc, g)
         n += 1

@@ -151,23 +151,29 @@ def make_local_run(loss_fn: Callable, space, eps: float, lr: float,
             return jax.lax.scan(step, delta0, (keys, batches))
 
         w_flat = backing.flatten(params)
+        # dense z buffer carried across the scan: the coordinate set is
+        # static, so each step refreshes the sparse values in place
+        # (scatter_into) instead of re-materializing n_pad zeros
+        z0 = jnp.zeros((backing.n_pad,), jnp.float32)
 
-        def step(delta_dense, inp):
+        def step(carry, inp):
+            delta_dense, z_buf = carry
             key, batch = inp
             base = w_flat + delta_dense
             if n_dirs == 1:
-                z_flat = backing.expand(space.sample_z(key))
+                z_flat = backing.scatter_into(z_buf, space.sample_z(key))
                 lp, lm = _dual_losses(loss_fn, backing, base, z_flat, eps,
                                       batch)
                 g = (lp - lm) / (2.0 * eps)
-                return zo_fused_update_flat(delta_dense, z_flat, None,
-                                            -lr * g), g
+                return (zo_fused_update_flat(delta_dense, z_flat, None,
+                                             -lr * g), z_flat), g
             upd, gs = _multi_dir_update(loss_fn, backing, space, base, key,
                                         eps, n_dirs, batch)
-            return zo_fused_update_flat(delta_dense, upd, None, -lr), gs
+            return (zo_fused_update_flat(delta_dense, upd, None, -lr),
+                    z_buf), gs
 
-        delta_T, gs = jax.lax.scan(step, backing.expand(delta0),
-                                   (keys, batches))
+        (delta_T, _), gs = jax.lax.scan(step, (backing.expand(delta0), z0),
+                                        (keys, batches))
         return backing.restrict(delta_T), gs
 
     return run

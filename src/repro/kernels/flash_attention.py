@@ -1,0 +1,151 @@
+"""Flash-attention forward Pallas kernel (blockwise online softmax).
+
+The training/prefill counterpart of ``decode_attention.py``: every MEERKAT
+step pays 2*n_dirs full forwards (Eq. 1), so the attention forward is the
+step-time and peak-memory bound at realistic sequence lengths.  This kernel
+streams K/V block by block with online-softmax accumulation in VMEM scratch
+and never materializes an [S, S] score matrix.
+
+GQA layout: queries are grouped per KV head ([B, KVH, S, G, dh] — no KV
+repeat; the G query heads of a group share one K/V stream).  The grid is
+(B, KVH, S/block_q, S/block_k) with the KV-block axis innermost (sequential
+accumulation into the running max / normalizer / value scratch, exactly the
+flash-decode recurrence).  Inside a block the G axis is folded into the
+query rows so the score matmul is a single [block_q*G, dh] x [dh, block_k]
+MXU contraction.
+
+Forward-attention contract (the hot path of ``models/layers`` routed via
+``resolve_attn_backend``):
+
+* causal masking, optionally banded to a sliding ``window`` (gemma2-style
+  local layers);
+* ``softcap`` tanh logit capping applied pre-masking (``layers.softcap``);
+* ``lengths`` is per-batch-row ([B] int32) key validity for right-padded
+  prefill — keys at positions >= lengths[b] are masked for every query, so
+  a padded batched prefill matches prefilling each row alone;
+* f32 accumulation regardless of operand dtype;
+* KV blocks that are entirely masked (future of the causal frontier, behind
+  the sliding-window band, or past the row's length) skip their compute
+  under ``pl.when``;
+* ``S`` must be a block multiple; ``ops.flash_attention`` pads arbitrary
+  lengths (padded keys sit at positions >= S >= lengths, always masked, and
+  padded query rows are trimmed).
+
+Validated in interpret=True mode against the dense / online jnp routes in
+``models/layers`` (tests/test_attn_backends.py).  The kernel defines no
+VJP: ``jax.grad`` callers resolve to the differentiable online/dense routes
+(see ``layers.differentiable_attn``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_attn_kernel(L_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, block_q: int, block_k: int,
+                       G: int, scale: float, softcap: float, window: int,
+                       causal: bool):
+    i = pl.program_id(2)   # query block
+    j = pl.program_id(3)   # KV block (innermost: sequential accumulation)
+    q0 = i * block_q
+    k0 = j * block_k
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level pruning: a KV block with no live (query, key) pair
+    # contributes nothing to the running stats — skip its matmuls.
+    needed = k0 < L_ref[0]
+    if causal:
+        needed &= k0 <= q0 + block_q - 1
+    if window:
+        needed &= (k0 + block_k - 1) > (q0 - window)
+
+    @pl.when(needed)
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32)      # [block_q, G, dh]
+        dh = q.shape[-1]
+        q2 = q.reshape(block_q * G, dh)          # row r <-> query q0 + r//G
+        k = k_ref[0, 0].astype(jnp.float32)      # [block_k, dh]
+        v = v_ref[0, 0].astype(jnp.float32)      # [block_k, dh]
+        s = jnp.dot(q2, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        rows = q0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        cols = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = cols < L_ref[0]
+        if causal:
+            valid &= cols <= rows
+        if window:
+            valid &= cols > rows - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]                       # [block_q*G, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        # mask p explicitly: on a fully-masked row m_new is still NEG_INF
+        # and exp(s - m_new) would be 1, not 0
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = out.reshape(block_q, G, -1).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, lengths, *, block_q: int = 128,
+                    block_k: int = 128, window: int = 0, softcap: float = 0.0,
+                    causal: bool = True, interpret: bool = True):
+    """q: [B, KVH, S, G, dh]; k, v: [B, KVH, S, dh]; lengths: int or [B]
+    int32 (per-row valid KV prefix).
+
+    Returns [B, KVH, S, G, dh] attention output: for query position t,
+    softmax over key positions p with p < lengths[b], p <= t (causal) and
+    t - window < p (when window > 0), with optional pre-mask tanh
+    softcapping of the logits and f32 accumulation.
+    """
+    B, KVH, S, G, dh = q.shape
+    assert k.shape == (B, KVH, S, dh), (q.shape, k.shape)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    grid = (B, KVH, S // block_q, S // block_k)
+    scale = dh ** -0.5
+    L_arr = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                             (B,))
+    kernel = functools.partial(
+        _flash_attn_kernel, block_q=block_q, block_k=block_k, G=G,
+        scale=scale, softcap=float(softcap), window=int(window),
+        causal=bool(causal))
+    kv_spec = pl.BlockSpec((1, 1, block_k, dh), lambda b, h, i, j: (b, h, j, 0))
+    q_spec = pl.BlockSpec((1, 1, block_q, G, dh),
+                          lambda b, h, i, j: (b, h, i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i, j: (b,)),
+            q_spec,
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, S, G, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q * G, 1), jnp.float32),   # normalizer l
+            pltpu.VMEM((block_q * G, dh), jnp.float32),  # value accumulator
+        ],
+        interpret=interpret,
+    )(L_arr, q, k, v)

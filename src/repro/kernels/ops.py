@@ -8,12 +8,15 @@ the kernels expect.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention as \
+    flash_attention_kernel
 from repro.kernels.gradip_reduce import LANE, gradip_reduce
 from repro.kernels.zo_update import BLOCK_R, SUB, dual_perturb, fused_update
 
@@ -108,6 +111,55 @@ def flash_decode(q, k, v, length, *, block_s: int = 512, softcap: float = 0.0,
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     return decode_attention(q, k, v, length, block_s=bs, softcap=softcap,
                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "causal",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, lengths=None, *, window: int = 0,
+                    softcap: float = 0.0, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """GQA flash-attention forward; see flash_attention.py for the kernel.
+
+    Model layout in, model layout out: q [B, S, H, hd]; k, v [B, S, KV, hd]
+    -> [B, S, H, hd] (H = KV * G, head h in group h // G — the same order
+    ``jnp.repeat(k, G, axis=2)`` produces in the dense route).
+
+    ``lengths`` ([B] int32 or None) masks right-padded keys.  Sequence
+    lengths that are not a block multiple are zero-padded up to one: padded
+    keys sit at positions >= S >= lengths so they are always masked, and
+    padded query rows are trimmed from the output."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # small sequences: one sublane-tiled block per axis (mirrors flash_decode)
+    s8 = -(-S // SUB) * SUB
+    bq = min(block_q, s8)
+    bk = min(block_k, s8)
+    per = bq * bk // math.gcd(bq, bk)  # lcm: the pad covers both block sizes
+    pad = (-S) % per
+    if pad:
+        cfgpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, cfgpad)
+        k = jnp.pad(k, cfgpad)
+        v = jnp.pad(v, cfgpad)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    else:
+        lengths = jnp.minimum(
+            jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                             (B,)), S)
+    Sp = S + pad
+    qg = q.reshape(B, Sp, KV, G, hd).transpose(0, 2, 1, 3, 4)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    out = flash_attention_kernel(qg, kg, vg, lengths, block_q=bq, block_k=bk,
+                                 window=window, softcap=softcap,
+                                 causal=causal, interpret=interpret)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(B, Sp, H, hd)
+    return out[:, :S]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -11,6 +11,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -19,6 +20,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.tiny import TINY
 from repro.models import Model
+from repro.models.transformer import DEFAULT_CTX
 from repro.serving.engine import ContinuousBatchingEngine, ServeEngine
 
 
@@ -30,6 +32,9 @@ def main():
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "pallas", "ref"],
                     help="decode-attention route (continuous engine)")
+    ap.add_argument("--attn-backend", default="auto",
+                    choices=["auto", "pallas", "online", "dense"],
+                    help="prefill forward-attention route")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4,
@@ -39,7 +44,8 @@ def main():
     a = ap.parse_args()
 
     cfg = TINY if a.arch == "tiny" else get_config(a.arch).reduced()
-    model = Model(cfg)
+    ctx = dataclasses.replace(DEFAULT_CTX, attn_backend=a.attn_backend)
+    model = Model(cfg, ctx=ctx)
     params = model.init(jax.random.key(a.seed))
     print(f"arch={cfg.name} params={model.n_params:,} engine={a.engine}")
 
@@ -50,7 +56,7 @@ def main():
     if a.engine == "continuous":
         engine = ContinuousBatchingEngine(
             model, params, max_slots=a.max_batch, S_max=a.s_max, bucket=16,
-            decode_backend=a.backend)
+            decode_backend=a.backend, attn_backend=a.attn_backend)
         for p in prompts:
             engine.submit(p, max_new_tokens=a.max_new)
         outs = engine.run()

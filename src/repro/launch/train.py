@@ -15,6 +15,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -25,6 +26,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import FLConfig
 from repro.configs.tiny import TINY
+from repro.models.transformer import DEFAULT_CTX
 from repro.core import (Client, DenseSpace, FederatedZO, LoRASpace,
                         magnitude_mask, pretrain_gradient_vec, random_mask,
                         sensitivity_mask)
@@ -66,6 +68,12 @@ def main():
     ap.add_argument("--density", type=float, default=1e-2)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--zo-backend", default="auto",
+                    choices=["auto", "pallas", "ref"],
+                    help="ZO perturb/update route (core/dispatch.py)")
+    ap.add_argument("--attn-backend", default="auto",
+                    choices=["auto", "pallas", "online", "dense"],
+                    help="forward-attention route for the ZO loss forwards")
     ap.add_argument("--vp", action="store_true",
                     help="MEERKAT-VP: calibrate GradIP + early-stop")
     ap.add_argument("--eval-every", type=int, default=5)
@@ -76,7 +84,8 @@ def main():
     if a.method == "lora" and cfg.lora_rank == 0:
         cfg = cfg.replace(lora_rank=4)
     spec = TaskSpec(vocab=min(cfg.vocab, 512), seq_len=16)
-    model = Model(cfg)
+    ctx = dataclasses.replace(DEFAULT_CTX, attn_backend=a.attn_backend)
+    model = Model(cfg, ctx=ctx)
     print(f"arch={cfg.name} params={model.n_params:,} method={a.method}")
 
     params = model.init(jax.random.key(a.seed))
@@ -108,6 +117,7 @@ def main():
 
     fl = FLConfig(n_clients=a.clients, rounds=a.rounds, local_steps=a.T,
                   lr=a.lr, eps=a.eps, density=a.density, seed=a.seed,
+                  zo_backend=a.zo_backend,
                   batch_size=a.batch, vp_calibration_steps=100,
                   vp_init_steps=20, vp_later_steps=20, vp_rho_later=2.0,
                   vp_sigma=0.25, vp_sigma_relative=True)

@@ -199,9 +199,10 @@ def _mixer_prefill(x, lp, mixer, cfg, ctx, positions, enc_out, S_max,
         local = mixer == "local_attn"
         window = cfg.sliding_window if local else 0
         kv_mask = None if valid is None else valid[:, None, :]
-        y = L.blocked_gqa_attention(q, k, v, cfg, ctx, window=window,
-                                    q_block=ctx.attn_q_block,
-                                    unroll=ctx.unroll_chunks, kv_mask=kv_mask)
+        y = L.forward_attention(q, k, v, cfg, ctx, window=window,
+                                kv_mask=kv_mask, lengths=lengths,
+                                q_block=ctx.attn_q_block,
+                                unroll=ctx.unroll_chunks)
         y = jnp.einsum("bsx,xe->bse", y.reshape(B, S, -1), lp["wo"])
         W = S_max
         if local and cfg.sliding_window:

@@ -3,9 +3,23 @@ softcaps / sliding windows / qk-norm / biases, gated & plain MLPs.
 
 All functions are pure; parameters are plain dict pytrees created in
 ``repro.models.init``.
+
+Forward attention (training / prefill) runs through one dispatch point,
+:func:`forward_attention`, selecting between three semantically identical
+routes per ``ShardCtx.attn_backend`` (see :func:`resolve_attn_backend`):
+
+* ``"pallas"`` — the blockwise online-softmax Pallas kernel
+  (``kernels/flash_attention.py``), GQA-grouped, no [S, S] scores;
+* ``"online"`` — the pure-jnp online-softmax route (differentiable, carries
+  no [S, S] scores either; the ``zo_dp`` sharded-training route);
+* ``"dense"``  — materialized scores (q-block-chunked when ``attn_q_block``
+  is set); the GSPMD-constrained reference route.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
+import math
 from typing import Optional
 
 import jax
@@ -96,30 +110,34 @@ def _project_qkv(x, p, cfg):
 def gqa_attention(q, k, v, mask, cfg, ctx=None):
     """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd]; mask: [B|1, Sq, Sk] bool or None.
 
-    KV heads are repeated to the full head count and scores use the
-    [B, H, Sq, Sk] layout so tensor-parallel sharding over H survives the
-    GQA grouping (see sharding/rules.py)."""
+    Grouped-query layout: scores use [B, KV, G, Sq, Sk] (the ``bqkgd``
+    grouping of :func:`grouped_gqa_attention`) so K/V are never repeated
+    G-fold — a repeat materializes (and, tensor-parallel, all-gathers) a
+    G-times-redundant K/V copy before the matmul.  The ctx head-sharding
+    constraint stays: q is constrained at its full H heads, K/V at their
+    stored KV heads, so tensor-parallel head sharding survives whenever the
+    axis divides the respective head count (see sharding/rules.py)."""
     B, Sq, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
-    if G > 1:
-        k = jnp.repeat(k, G, axis=2)
-        v = jnp.repeat(v, G, axis=2)
     scale = hd ** -0.5
     if ctx is not None:
         spec = ctx.attn_head_spec(B, Sq, H)
         if spec is not None:
             q = ctx.constrain(q, spec)
-            k = ctx.constrain(k, spec)
-            v = ctx.constrain(v, spec)
-    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+        kv_spec = ctx.attn_head_spec(B, k.shape[1], KV)
+        if kv_spec is not None:
+            k = ctx.constrain(k, kv_spec)
+            v = ctx.constrain(v, kv_spec)
+    qg = q.reshape(B, Sq, KV, G, hd)  # head h -> (kv h//G, g h%G)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
     scores = softcap(scores, cfg.attn_softcap)
     if mask is not None:
-        scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhqs,bshd->bqhd", w, v.astype(jnp.float32))
-    return out.astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(v.dtype)
 
 
 def causal_mask(Sq: int, Sk: int, window: int = 0, offset: int = 0):
@@ -135,9 +153,123 @@ def causal_mask(Sq: int, Sk: int, window: int = 0, offset: int = 0):
     return m[None]
 
 
+# ---------------------------------------- forward-attention dispatch ----
+ATTN_BACKENDS = ("auto", "pallas", "online", "dense")
+
+# below this the [S, S] score tile is cache/VMEM-resident and the dense
+# route's single fused matmul wins; at and above it the blockwise routes
+# avoid the O(S^2) materialization that dominates forward memory
+ATTN_AUTO_MIN_S = 256
+
+_DIFFERENTIABLE_ATTN = contextvars.ContextVar("differentiable_attn",
+                                              default=False)
+
+
+@contextlib.contextmanager
+def differentiable_attn():
+    """Scope forcing :func:`resolve_attn_backend` onto the differentiable
+    jnp routes ("online"/"dense").  The Pallas forward kernel defines no
+    VJP, so ``jax.grad`` callers (train/first_order, sensitivity-mask
+    calibration, GradIP pre-training gradients) enter this scope around
+    their grad traces — the resolve happens at trace time, so the choice is
+    baked into the jitted computation."""
+    tok = _DIFFERENTIABLE_ATTN.set(True)
+    try:
+        yield
+    finally:
+        _DIFFERENTIABLE_ATTN.reset(tok)
+
+
+def resolve_attn_backend(backend, cfg, ctx=None, *, S: int = 0,
+                         differentiable: Optional[bool] = None) -> str:
+    """Map a requested forward-attention backend to 'pallas' | 'online' |
+    'dense'.
+
+    Mirrors :func:`resolve_decode_backend` for the training/prefill
+    forward: "auto" prefers the Pallas flash-attention kernel once ``S``
+    is large enough that the [S, S] score materialization matters, and
+    falls back to the jnp routes for layouts the kernel does not cover —
+    a sharded mesh (the dense route carries the GSPMD sharding
+    constraints; "online" is the sharded large-S choice), a grad trace
+    (no kernel VJP — see :func:`differentiable_attn`), a head_dim off the
+    128-lane tile, or an off-TPU host, where the kernel only runs in
+    interpret mode: unlike the per-token flash-decode kernel, interpreting
+    the full-S forward is the *slowest* route by a wide margin
+    (BENCH_attn.json), so "auto" means the fastest blockwise route for
+    the host — "online" interpreted, "pallas" compiled."""
+    backend = backend or "auto"
+    if backend not in ATTN_BACKENDS:
+        raise ValueError(
+            f"attn backend must be one of {ATTN_BACKENDS}, got {backend!r}")
+    if differentiable is None:
+        differentiable = _DIFFERENTIABLE_ATTN.get()
+    if differentiable and backend in ("auto", "pallas"):
+        return "online" if (not S or S >= ATTN_AUTO_MIN_S) else "dense"
+    if backend != "auto":
+        return backend
+    if ctx is not None and getattr(ctx, "online_attn", False):
+        return "online"  # legacy zo_dp flag, kept as an explicit route
+    if ctx is not None and ctx.mesh is not None:
+        return "dense" if (not S or S < ATTN_AUTO_MIN_S) else "online"
+    if S and S < ATTN_AUTO_MIN_S:
+        return "dense"
+    from repro.kernels.ops import _default_interpret
+    if _default_interpret() or cfg.resolved_head_dim % 128:
+        return "online"
+    return "pallas"
+
+
+def forward_attention(q, k, v, cfg, ctx=None, *, window: int = 0,
+                      kv_mask=None, lengths=None, q_block: int = 0,
+                      kv_block: int = 0, unroll: bool = False, backend=None):
+    """Unified forward-attention entry: q [B,S,H,hd]; k,v [B,S,KV,hd] ->
+    [B,S,H,hd], causal (optionally banded to ``window``).
+
+    Every training / prefill attention call routes through here (the ZO
+    loss forwards inherit the route through the model's ctx).  Right-padded
+    batches express key validity as per-row ``lengths`` [B] and/or
+    ``kv_mask`` [B, 1, Sk]; all three backends honor both."""
+    B, S, H, hd = q.shape
+    be = resolve_attn_backend(
+        backend or (getattr(ctx, "attn_backend", None)
+                    if ctx is not None else None),
+        cfg, ctx, S=S)
+    if be == "pallas":
+        from repro.kernels.ops import flash_attention
+        L = lengths
+        if L is None and kv_mask is not None:
+            # right-pad contract: the mask is a per-row valid key prefix
+            L = kv_mask.reshape(B, S).sum(-1).astype(jnp.int32)
+        out = flash_attention(q, k, v, L, window=window,
+                              softcap=cfg.attn_softcap)
+        return out.astype(v.dtype)
+    if be == "online":
+        # default q tile of 128 keeps every score tile strictly smaller
+        # than [S, S] at any routed S (>= ATTN_AUTO_MIN_S under "auto")
+        return online_gqa_attention(
+            q, k, v, cfg, window=window,
+            q_block=q_block or min(128, S),
+            kv_block=min(kv_block
+                         or (getattr(ctx, "kv_block", 512)
+                             if ctx is not None else 512), S),
+            unroll=unroll, lengths=lengths,
+            kv_mask=None if kv_mask is None else kv_mask.reshape(B, S))
+    if kv_mask is None and lengths is not None:
+        l_arr = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                                 (B,))
+        kv_mask = (jnp.arange(S)[None, :] < l_arr[:, None])[:, None, :]
+    return blocked_gqa_attention(q, k, v, cfg, ctx, window=window,
+                                 q_block=q_block, unroll=unroll,
+                                 kv_mask=kv_mask)
+
+
 def self_attention(x, p, cfg, positions, *, local: bool, mask_extra=None,
-                   ctx=None):
-    """Full training/prefill self-attention. x: [B,S,D] -> [B,S,D]."""
+                   ctx=None, lengths=None):
+    """Full training/prefill self-attention. x: [B,S,D] -> [B,S,D].
+
+    Routes through :func:`forward_attention` (``ctx.attn_backend``);
+    ``mask_extra`` — an arbitrary [B|1,S,S] mask — only has a dense
+    expression and pins the dense route."""
     B, S, _ = x.shape
     q, k, v = _project_qkv(x, p, cfg)
     if cfg.rope_style != "none":
@@ -145,10 +277,17 @@ def self_attention(x, p, cfg, positions, *, local: bool, mask_extra=None,
         q = apply_rope(q, positions, cfg.rope_theta, partial)
         k = apply_rope(k, positions, cfg.rope_theta, partial)
     window = cfg.sliding_window if local else 0
-    mask = causal_mask(S, S, window)
     if mask_extra is not None:
-        mask = mask & mask_extra
-    out = gqa_attention(q, k, v, mask, cfg, ctx)
+        mask = causal_mask(S, S, window) & mask_extra
+        if lengths is not None:
+            l_arr = jnp.broadcast_to(
+                jnp.asarray(lengths, jnp.int32).reshape(-1), (B,))
+            mask = mask & (jnp.arange(S)[None, :]
+                           < l_arr[:, None])[:, None, :]
+        out = gqa_attention(q, k, v, mask, cfg, ctx)
+    else:
+        out = forward_attention(q, k, v, cfg, ctx, window=window,
+                                lengths=lengths)
     return jnp.einsum("bsx,xe->bse", out.reshape(B, S, -1), p["wo"])
 
 
@@ -185,7 +324,7 @@ def blocked_gqa_attention(q, k, v, cfg, ctx, *, window: int, q_block: int,
 
 def online_gqa_attention(q, k, v, cfg, *, window: int = 0,
                          q_block: int = 512, kv_block: int = 512,
-                         unroll: bool = False):
+                         unroll: bool = False, lengths=None, kv_mask=None):
     """Flash-style causal attention: online-softmax over KV blocks, grouped
     query (no KV repeat).  Never materializes [S, S] scores — the working
     set per (q_block, kv_block) tile is O(q_block * kv_block), so the HBM
@@ -193,35 +332,66 @@ def online_gqa_attention(q, k, v, cfg, *, window: int = 0,
 
     q: [B,S,H,hd]; k,v: [B,S,KV,hd] -> [B,S,H,hd].  Semantically identical
     to gqa_attention with a causal (optionally banded) mask.
+
+    ``S`` need not be a block multiple: inputs are zero-padded up to one
+    (padded keys are masked through the key-validity stream, padded query
+    rows trimmed from the output).  ``lengths`` ([B] int32) and/or
+    ``kv_mask`` ([B, S] bool) mask right-padded keys, so batched
+    right-padded prefill/training can take this route instead of falling
+    back to dense attention.
     """
     B, S, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
     scale = hd ** -0.5
-    if S % q_block or S % kv_block:
-        return gqa_attention(q, k, v, causal_mask(S, S, window), cfg, None)
-    nq, nk = S // q_block, S // kv_block
+    q_block = max(1, min(q_block, S))
+    kv_block = max(1, min(kv_block, S))
+    per = q_block * kv_block // math.gcd(q_block, kv_block)
+    pad = (-S) % per
+    kvv = None if kv_mask is None else jnp.asarray(kv_mask, bool)
+    if lengths is not None:
+        l_arr = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                                 (B,))
+        lm = jnp.arange(S)[None, :] < l_arr[:, None]
+        kvv = lm if kvv is None else (kvv & lm)
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(x, padw) for x in (q, k, v))
+        if kvv is None:
+            kvv = jnp.broadcast_to(jnp.arange(S + pad)[None, :] < S,
+                                   (B, S + pad))
+        else:
+            kvv = jnp.pad(kvv, ((0, 0), (0, pad)))
+    Sp = S + pad
+    nq, nk = Sp // q_block, Sp // kv_block
     qg = q.reshape(B, nq, q_block, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
     ks = k.reshape(B, nk, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
     vs = v.reshape(B, nk, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
+    kvb = (None if kvv is None
+           else kvv.reshape(B, nk, kv_block).transpose(1, 0, 2))
     ki_base = jnp.arange(kv_block)[None, :]
     qi_base = jnp.arange(q_block)[:, None]
 
     def q_chunk(args):
-        qb, q0 = args  # [B,q_block,KV,G,hd], scalar offset
+        qb, q0 = args[0], args[1]  # [B,q_block,KV,G,hd], scalar offset
 
         def kv_step(carry, inp):
             m, l, acc = carry
-            kb, vb, k0 = inp
+            kb, vb, k0 = inp[0], inp[1], inp[2]
             s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
                            preferred_element_type=jnp.float32) * scale
             s = softcap(s, cfg.attn_softcap)
             valid = (k0 + ki_base) <= (q0 + qi_base)
             if window:
                 valid &= (k0 + ki_base) > (q0 + qi_base - window)
-            s = jnp.where(valid[None, None, None, :, :], s, NEG_INF)
+            valid = valid[None, None, None, :, :]
+            if kvb is not None:
+                valid = valid & inp[3][:, None, None, None, :]  # [B,kv_block]
+            s = jnp.where(valid, s, NEG_INF)
             m_new = jnp.maximum(m, s.max(-1))
-            p = jnp.exp(s - m_new[..., None])
+            # mask p explicitly: on a fully-masked row m_new is still
+            # NEG_INF and exp(s - m_new) would be 1, not 0
+            p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
             alpha = jnp.exp(m - m_new)
             l_new = l * alpha + p.sum(-1)
             acc_new = acc * alpha[..., None] + jnp.einsum(
@@ -233,14 +403,14 @@ def online_gqa_attention(q, k, v, cfg, *, window: int = 0,
         l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
         a0 = jnp.zeros((B, KV, G, q_block, hd), jnp.float32)
         offs = jnp.arange(nk) * kv_block
+        xs = (ks, vs, offs) if kvb is None else (ks, vs, offs, kvb)
         if unroll:
             carry = (m0, l0, a0)
             for i in range(nk):
-                carry, _ = kv_step(carry, (ks[i], vs[i], offs[i]))
+                carry, _ = kv_step(carry, tuple(x[i] for x in xs))
             m, l, acc = carry
         else:
-            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
-                                          (ks, vs, offs))
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
         out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,KV,G,q_block,hd]
         return out
 
@@ -250,14 +420,16 @@ def online_gqa_attention(q, k, v, cfg, *, window: int = 0,
     else:
         outs = jax.lax.map(q_chunk, (qg, jnp.arange(nq) * q_block))
     # [nq,B,KV,G,q_block,hd] -> [B, nq*q_block, KV*G, hd]
-    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, hd)
-    return out.astype(v.dtype)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, H, hd)
+    return out[:, :S].astype(v.dtype)
 
 
 def self_attention_chunked(x, p, cfg, positions, *, local: bool, q_block: int,
-                           unroll: bool = False, ctx=None):
-    """Query-block-chunked causal self-attention (see blocked_gqa_attention);
-    semantically identical to :func:`self_attention`."""
+                           unroll: bool = False, ctx=None, lengths=None):
+    """Query-block-chunked causal self-attention; semantically identical to
+    :func:`self_attention`, threading ``q_block`` into whichever backend
+    :func:`forward_attention` resolves (the dense route chunks its scores
+    per q_block, the online/pallas routes tile by it)."""
     B, S, _ = x.shape
     q, k, v = _project_qkv(x, p, cfg)
     if cfg.rope_style != "none":
@@ -265,15 +437,8 @@ def self_attention_chunked(x, p, cfg, positions, *, local: bool, q_block: int,
         q = apply_rope(q, positions, cfg.rope_theta, partial)
         k = apply_rope(k, positions, cfg.rope_theta, partial)
     window = cfg.sliding_window if local else 0
-    if ctx is not None and getattr(ctx, "online_attn", False):
-        out = online_gqa_attention(
-            q, k, v, cfg, window=window,
-            q_block=q_block or min(512, q.shape[1]),
-            kv_block=min(getattr(ctx, "kv_block", 512), q.shape[1]),
-            unroll=unroll)
-    else:
-        out = blocked_gqa_attention(q, k, v, cfg, ctx, window=window,
-                                    q_block=q_block, unroll=unroll)
+    out = forward_attention(q, k, v, cfg, ctx, window=window, q_block=q_block,
+                            unroll=unroll, lengths=lengths)
     return jnp.einsum("bsx,xe->bse", out.reshape(B, S, -1), p["wo"])
 
 
@@ -310,10 +475,12 @@ def grouped_gqa_attention(q, k, v, valid, cfg, ctx=None):
 
     q: [B,Sq,H,hd]; k,v: [B,W,KV,hd]; valid: [B|1,Sq,W] bool.
 
-    ``gqa_attention`` repeats K/V to H heads before the matmul, which for a
-    32k decode cache materializes (and, tensor-parallel, all-gathers) a
-    G-times-redundant [B,W,KV,G,hd] tensor (§Perf iteration 1).  Grouping
-    the *query* instead keeps cache-sized tensors at their stored shape;
+    ``gqa_attention`` originally repeated K/V to H heads before the
+    matmul, which for a 32k decode cache materializes (and,
+    tensor-parallel, all-gathers) a G-times-redundant [B,W,KV,G,hd]
+    tensor (§Perf iteration 1); this grouped variant predates — and
+    motivated — the same ``bqkgd`` layout now used there.  Grouping
+    the *query* keeps cache-sized tensors at their stored shape;
     with the cache sequence-sharded over 'model', scores come out
     W-sharded, the softmax lowers to cheap stat all-reduces, and the output
     contraction partial-sums into one [B,KV,G,hd]-sized all-reduce."""

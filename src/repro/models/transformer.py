@@ -41,6 +41,11 @@ class ShardCtx:
     # Pallas flash-decode kernel when the layout supports it (interpret mode
     # off-TPU), "ref" the grouped jnp path (the only sharded-mesh choice)
     decode_backend: str = "auto"  # auto | pallas | ref
+    # forward-attention route for training / prefill
+    # (layers.resolve_attn_backend): "auto" runs the Pallas flash-attention
+    # kernel at large S, the blockwise jnp online-softmax or dense scores
+    # otherwise; grad traces always resolve to a differentiable jnp route
+    attn_backend: str = "auto"  # auto | pallas | online | dense
 
     @property
     def dp_size(self) -> int:

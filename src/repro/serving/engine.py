@@ -226,19 +226,23 @@ class ContinuousBatchingEngine:
       (all prompt buckets seen) no call re-traces.
 
     ``decode_backend`` selects the decode-attention route
-    ("pallas" | "ref" | "auto", see ``models/layers.resolve_decode_backend``).
+    ("pallas" | "ref" | "auto", see ``models/layers.resolve_decode_backend``);
+    ``attn_backend`` the grouped prefill-into-slot forward-attention route
+    ("pallas" | "online" | "dense" | "auto", see
+    ``models/layers.resolve_attn_backend``).
     """
 
     BURSTS = (32, 24, 16, 12, 8, 6, 4, 3, 2, 1)  # compiled scan lengths
 
     def __init__(self, model: Model, params, max_slots: int = 4,
                  S_max: int = 128, bucket: int = 16,
-                 decode_backend: str = "auto", temperature: float = 0.0,
-                 seed: int = 0):
+                 decode_backend: str = "auto", attn_backend: str = "auto",
+                 temperature: float = 0.0, seed: int = 0):
         self.model = model
         self.cfg = model.cfg
         self.ctx = dataclasses.replace(model.ctx,
-                                       decode_backend=decode_backend)
+                                       decode_backend=decode_backend,
+                                       attn_backend=attn_backend)
         self.params = params
         self.max_slots = max_slots
         self.S_max = S_max

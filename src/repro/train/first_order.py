@@ -8,16 +8,22 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.models.layers import differentiable_attn
 from repro.optim import make_optimizer
 
 
 def make_train_step(loss_fn: Callable, optimizer: str = "sgd",
                     lr: float = 1e-3, **kw):
-    """Returns (init_state, jittable step(params, opt_state, batch))."""
+    """Returns (init_state, jittable step(params, opt_state, batch)).
+
+    Grad traces run under :func:`differentiable_attn`: the flash-attention
+    forward kernel has no VJP, so ``attn_backend`` resolves to the
+    differentiable "online"/"dense" routes here."""
     init, update = make_optimizer(optimizer, lr, **kw)
 
     def step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        with differentiable_attn():
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         upd, opt_state = update(grads, opt_state, params)
         params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, upd)
         return params, opt_state, loss
@@ -34,7 +40,8 @@ def fedavg_round(loss_fn: Callable, params, client_batches, lr: float,
 
     def client_run(p, batches):
         def one(pp, b):
-            g = jax.grad(loss_fn)(pp, b)
+            with differentiable_attn():
+                g = jax.grad(loss_fn)(pp, b)
             pp = jax.tree.map(lambda w, gg: w - lr * gg.astype(w.dtype), pp, g)
             return pp, None
 

@@ -1,2 +1,3 @@
+from repro.utils.jaxpr import max_square_dims
 from repro.utils.tree import (flat_size, leaf_paths, tree_concat_flat,
                               tree_from_flat, tree_zeros_like_flat)

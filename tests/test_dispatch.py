@@ -262,6 +262,43 @@ def test_fl_train_step_parity(sizes):
                        float(out["pallas"][2]["loss"]), rtol=1e-4)
 
 
+@pytest.mark.parametrize("backend,stack_forwards",
+                         [("pallas", True), ("pallas", False),
+                          ("pallas", None), ("ref", None)])
+def test_fl_train_loop_parity(backend, stack_forwards):
+    """The scanned burst == folding make_fl_train_step, on the ref-route
+    scan (the bench's naive baseline) and both fused forward strategies
+    (stacked vmap / sequential) plus the auto pick."""
+    from repro.core.fl_step import make_fl_train_loop
+
+    n_clients, bs, n_steps = 4, 2, 3
+    params = vec_params(jax.random.key(40), sizes=((48,), (8, 12)))
+    space = random_mask(params, density=0.2, seed=41)
+    batches = {"target": jax.random.normal(
+        jax.random.key(42), (n_steps, n_clients * bs, total_size(params)))}
+    kw = dict(eps=1e-3, lr=1e-2, n_clients=n_clients)
+    key = jax.random.key(43)
+
+    loop = jax.jit(make_fl_train_loop(vec_per_example, space, n_steps=n_steps,
+                                      backend=backend,
+                                      stack_forwards=stack_forwards, **kw))
+    p_loop, gs_loop, m_loop = loop(params, key, batches)
+
+    # fold the single-step factory over the same keys/batches
+    step = jax.jit(make_fl_train_step(vec_per_example, space, backend="ref",
+                                      **kw))
+    p, gs = params, []
+    for t, k in enumerate(jax.random.split(key, n_steps)):
+        p, g_cl, m = step(p, k, jax.tree.map(lambda x: x[t], batches))
+        gs.append(np.asarray(g_cl))
+    np.testing.assert_allclose(np.asarray(gs_loop), np.stack(gs),
+                               rtol=1e-2, atol=5e-3)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p_loop)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+    assert np.allclose(float(m["loss"]), float(m_loop["loss"]), rtol=1e-4)
+
+
 def test_fl_round_step_parity_vmapped_clients():
     T, K = 3, 2
     params = vec_params(jax.random.key(18))
