@@ -1,0 +1,239 @@
+"""Federated-round scaling benchmark: round time + comm bytes vs
+client count x mesh shape (ISSUE 5 tentpole; writes
+``runs/bench/BENCH_fl_scale.json``).
+
+For each (arch in {tiny, qwen3-4b-reduced}) x (client count) x (mesh
+spec), a **subprocess** (XLA must learn the forced host-device count
+before jax initializes) runs ``FederatedZO`` rounds under the
+``sharding/fl.FLShardPlan`` mesh route and reports:
+
+* ``round_s``          — median wall time of a full federated round,
+* ``comm_up/down``     — FL protocol bytes per round (``CommLog``; must be
+  mesh-invariant — gated),
+* ``collectives``      — per-device intra-mesh collective bytes of the
+  compiled client-group HLO (``launch/hlo_tools.collective_bytes``): the
+  cost sharding *adds* (ZeRO-3 weight gather) next to the scalars the FL
+  protocol moves — the paper's 1000x saving is only meaningful when both
+  are visible,
+* the production 16x16 mesh (256 host devices) as a **dry-run row**:
+  lower + compile + collective extraction only, execution skipped
+  (matching ``launch/dryrun.py`` semantics).
+
+``zo_backend="ref"`` everywhere so mesh shapes compare the same per-step
+route (the fused-vs-ref axis is BENCH_zo_step's job).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.fl_scale_bench           # full grid
+  PYTHONPATH=src python -m benchmarks.fl_scale_bench --smoke   # CI subset
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+RUNS_DIR = os.path.join(os.path.dirname(__file__), "..", "runs", "bench")
+ARCHS = ("tiny", "qwen3-4b")
+EXEC_MESHES = ("none", "1x1", "2x2")
+DRYRUN_MESH = "16x16"
+
+
+def mesh_devices(spec: str) -> int:
+    if spec == "none":
+        return 1
+    from repro.launch.mesh import parse_mesh_spec  # no jax device state
+    return parse_mesh_spec(spec).n_devices
+
+
+# --------------------------------------------------------------------------
+# worker: one (arch, clients, mesh) cell, run in a fresh process
+# --------------------------------------------------------------------------
+
+def worker(a) -> dict:
+    import jax
+    import jax.numpy as jnp  # noqa: F401
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.configs.base import FLConfig
+    from repro.configs.tiny import TINY
+    from repro.core import Client, FederatedZO, random_mask, round_keys
+    from repro.data.partition import dirichlet_partition, subset
+    from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset
+    from repro.launch.hlo_tools import COLLECTIVE_FACTOR, collective_bytes
+    from repro.models import Model
+    from repro.sharding.fl import make_fl_plan
+
+    cfg = TINY if a.arch == "tiny" else get_config(a.arch).reduced()
+    spec = TaskSpec(vocab=min(cfg.vocab, 512), seq_len=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    loss, _, _ = make_task_fns(model, spec)
+    space = random_mask(params, density=1e-2, seed=3, balanced=False)
+
+    train = sample_dataset(spec, max(2048, a.clients * a.T * 16), seed=1)
+    parts = dirichlet_partition(train["label"], a.clients, 0.5, seed=0)
+    clients = [Client(k, subset(train, p), 16) for k, p in enumerate(parts)]
+    plan = (None if a.mesh == "none"
+            else make_fl_plan(spec=a.mesh, rule=a.rule))
+    fl = FLConfig(n_clients=a.clients, local_steps=a.T, lr=5e-2, eps=1e-3,
+                  seed=0, zo_backend="ref")
+    srv = FederatedZO(loss, params, space, fl, clients, plan=plan)
+
+    rec = {"arch": cfg.name, "mesh": a.mesh, "rule": a.rule,
+           "n_devices": 1 if plan is None else plan.mesh_cfg.n_devices,
+           "clients": a.clients, "T": a.T, "space_n": space.n,
+           "n_params": model.n_params,
+           "mode": "compile-only" if a.compile_only else "exec"}
+
+    if not a.compile_only:
+        # warm every jit cache (client group + virtual-path recon) with a
+        # real round, then time
+        srv.run_round()
+        times = []
+        for _ in range(a.reps):
+            up0, down0 = srv.comm.up_bytes, srv.comm.down_bytes
+            t0 = time.time()
+            srv.run_round()
+            times.append(time.time() - t0)
+        rec["round_s"] = round(float(np.median(times)), 4)
+        rec["comm_up_bytes_per_round"] = srv.comm.up_bytes - up0
+        rec["comm_down_bytes_per_round"] = srv.comm.down_bytes - down0
+
+    # collective extraction needs the Compiled object, which only the AOT
+    # lower().compile() path exposes — one extra compile per cell, paid
+    # after the timing loop (and the *only* compile in compile-only mode,
+    # the 16x16 dry-run rows)
+    batches = srv._stack([c.next_batches(a.T) for c in clients])
+    for c in clients:
+        c.ptr = 0
+    grp = srv._batch_run_for(a.T, a.clients, template_batches=batches)
+    keys = round_keys(fl.seed, 0, a.T)
+    keys_d, batches_d = srv._place_group(keys, batches, a.clients)
+    t0 = time.time()
+    compiled = grp.lower(srv.params, keys_d, batches_d).compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+    coll = collective_bytes(compiled.as_text())
+    rec["collectives"] = coll
+    rec["collective_wire_bytes_per_device"] = sum(
+        COLLECTIVE_FACTOR[op] * b for op, b in coll.items())
+    rec["ok"] = True
+    return rec
+
+
+# --------------------------------------------------------------------------
+# parent: spawn one subprocess per cell with the right XLA_FLAGS
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, clients: int, mesh: str, rule: str, T: int,
+             reps: int, compile_only: bool) -> dict:
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    n = mesh_devices(mesh)
+    if n > 1:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={n}"
+                            ).strip()
+    out = tempfile.NamedTemporaryFile(suffix=".json", delete=False)
+    out.close()
+    cmd = [sys.executable, "-m", "benchmarks.fl_scale_bench", "--worker",
+           "--arch", arch, "--clients", str(clients), "--mesh", mesh,
+           "--rule", rule, "--T", str(T), "--reps", str(reps),
+           "--out-json", out.name]
+    if compile_only:
+        cmd.append("--compile-only")
+    t0 = time.time()
+    rec = {"arch": arch, "mesh": mesh, "rule": rule, "clients": clients,
+           "T": T, "ok": False}
+    try:
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=3600)
+        if proc.returncode == 0 and os.path.getsize(out.name):
+            with open(out.name) as f:
+                rec = json.load(f)
+        else:
+            rec["error"] = (proc.stderr or proc.stdout)[-2000:]
+    except subprocess.TimeoutExpired:
+        rec["error"] = "timeout (3600s)"  # record the cell, keep the grid
+    finally:
+        rec["wall_s"] = round(time.time() - t0, 1)
+        os.unlink(out.name)
+    status = "ok " if rec.get("ok") else "FAIL"
+    print(f"[{status}] {arch} K={clients} mesh={mesh} "
+          f"{'(compile-only) ' if compile_only else ''}"
+          f"round={rec.get('round_s', '-')}s wall={rec['wall_s']}s",
+          flush=True)
+    return rec
+
+
+def gates(rows) -> dict:
+    """comm_invariant: FL protocol bytes identical across mesh shapes for
+    the same (arch, clients, T) cell — and actually *compared*: every
+    cell must have succeeded on >= 2 distinct mesh shapes, else the gate
+    fails rather than passing vacuously.  all_ok: every cell ran."""
+    comm, meshes = {}, {}
+    for r in rows:
+        if r.get("mode") == "exec" and r.get("ok"):
+            cell = (r["arch"], r["clients"], r["T"])
+            comm.setdefault(cell, set()).add(
+                (r["comm_up_bytes_per_round"],
+                 r["comm_down_bytes_per_round"]))
+            meshes.setdefault(cell, set()).add(r["mesh"])
+    compared = bool(comm) and all(len(m) >= 2 for m in meshes.values())
+    return {"comm_invariant_across_mesh":
+            compared and all(len(v) == 1 for v in comm.values()),
+            "all_ok": all(r.get("ok") for r in rows) and bool(rows)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--mesh", default="none")
+    ap.add_argument("--rule", default="fsdp")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--T", type=int, default=2)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--compile-only", action="store_true")
+    ap.add_argument("--out-json", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset; writes BENCH_fl_scale_smoke.json")
+    a = ap.parse_args()
+
+    if a.worker:
+        rec = worker(a)
+        with open(a.out_json, "w") as f:
+            json.dump(rec, f, indent=1)
+        return
+
+    if a.smoke:
+        # CI vehicle: one executed mesh + the 256-host-device production
+        # mesh as a compile-only dry-run (launch/dryrun.py semantics)
+        cells = [("tiny", 4, m, False) for m in ("none", "2x2")]
+        cells += [("tiny", 256, DRYRUN_MESH, True)]
+        reps = 1
+    else:
+        cells = [(arch, K, m, False)
+                 for arch in ARCHS for K in (4, 8) for m in EXEC_MESHES]
+        # production-mesh dry-run rows: 256 host devices, compile only
+        cells += [(arch, 256, DRYRUN_MESH, True) for arch in ARCHS]
+        reps = 3
+    rows = [run_cell(arch, K, mesh, a.rule, a.T, reps, co)
+            for arch, K, mesh, co in cells]
+    result = {"bench": "fl_scale", "rule": a.rule, "T": a.T,
+              "zo_backend": "ref", "rows": rows, "gates": gates(rows)}
+    os.makedirs(RUNS_DIR, exist_ok=True)
+    name = "BENCH_fl_scale_smoke" if a.smoke else "BENCH_fl_scale"
+    path = os.path.join(RUNS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"gates: {result['gates']}")
+    print("wrote", os.path.abspath(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,18 @@
-"""Quickstart: MEERKAT sparse-ZO federated fine-tuning in ~40 lines.
+"""Quickstart: MEERKAT sparse-ZO federated fine-tuning in ~50 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py               # full demo
+    PYTHONPATH=src python examples/quickstart.py --rounds 10   # CI smoke
 
 Builds a tiny decoder LM, selects the transferable sensitivity mask from a
 C4-proxy corpus (0.1%-style extreme sparsity, scaled for the tiny model),
 partitions a synthetic classification task across 8 Non-IID clients
 (Dirichlet alpha=0.5), and runs high-frequency (T=1) MEERKAT rounds —
 clients upload one scalar per step, the server reconstructs their virtual
-paths and aggregates.
+paths and aggregates.  Runs on CPU; the ZO perturb/update dispatches
+through the fused Pallas kernels in interpret mode (``--zo-backend``).
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -19,6 +23,13 @@ from repro.data.corpus import pretrain_batches
 from repro.data.partition import dirichlet_partition, subset
 from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset
 from repro.models import Model
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=150)
+ap.add_argument("--clients", type=int, default=8)
+ap.add_argument("--zo-backend", default="auto",
+                choices=["auto", "pallas", "ref"])
+a = ap.parse_args()
 
 spec = TaskSpec()
 model = Model(TINY)
@@ -34,19 +45,21 @@ print(f"mask: {space.n} / {model.n_params} params "
 
 # 2. Non-IID clients (Dirichlet alpha=0.5)
 train = sample_dataset(spec, 2048, seed=1)
-parts = dirichlet_partition(train["label"], n_clients=8, alpha=0.5)
+parts = dirichlet_partition(train["label"], n_clients=a.clients, alpha=0.5)
 clients = [Client(k, subset(train, p), batch_size=16)
            for k, p in enumerate(parts)]
 
 # 3. high-frequency MEERKAT (T=1): scalar-only sync every local step
-fl = FLConfig(n_clients=8, local_steps=1, lr=5e-2, eps=1e-3, density=1e-2)
+fl = FLConfig(n_clients=a.clients, local_steps=1, lr=5e-2, eps=1e-3,
+              density=1e-2, zo_backend=a.zo_backend)
 server = FederatedZO(loss, params, space, fl, clients, eval_fn=evaluate)
 
 ev = sample_dataset(spec, 512, seed=2)
 eval_batch = {k: np.asarray(v) for k, v in ev.items()}
 m0 = evaluate(params, eval_batch)
 print(f"before: acc={float(m0['acc']):.3f}")
-server.run(rounds=150, eval_every=50, eval_batch=eval_batch, verbose=True)
+server.run(a.rounds, eval_every=max(1, a.rounds // 3),
+           eval_batch=eval_batch, verbose=True)
 m = evaluate(server.params, eval_batch)
-print(f"after 150 rounds: acc={float(m['acc']):.3f}  "
+print(f"after {a.rounds} rounds: acc={float(m['acc']):.3f}  "
       f"(upload/client/round = 4 bytes)")

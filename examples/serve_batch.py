@@ -10,6 +10,7 @@ bucketed per-request prefill admits each prompt into a free decode slot,
 one compiled step advances all active slots, and finished requests retire
 early to make room for the queue.
 """
+import argparse
 import time
 
 import jax
@@ -19,18 +20,25 @@ from repro.configs import get_config
 from repro.models import Model
 from repro.serving.engine import ContinuousBatchingEngine
 
-ARCHS = ["gemma2-27b", "jamba-1.5-large-398b", "pixtral-12b"]
+ap = argparse.ArgumentParser()
+ap.add_argument("--archs", default="gemma2-27b,jamba-1.5-large-398b,"
+                "pixtral-12b",
+                help="comma-separated registered arch names (reduced "
+                     "variants are served)")
+ap.add_argument("--requests", type=int, default=5)
+ap.add_argument("--max-new", type=int, default=8)
+a = ap.parse_args()
 
 rng = np.random.default_rng(0)
-for name in ARCHS:
+for name in a.archs.split(","):
     cfg = get_config(name).reduced()
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     engine = ContinuousBatchingEngine(model, params, max_slots=4, S_max=96,
                                       bucket=16)
-    for i in range(5):
+    for i in range(a.requests):
         prompt = rng.integers(0, cfg.vocab, size=int(rng.integers(4, 20)))
-        engine.submit(prompt, max_new_tokens=8)
+        engine.submit(prompt, max_new_tokens=a.max_new)
     t0 = time.time()
     outs = engine.run()
     dt = time.time() - t0

@@ -1,12 +1,15 @@
 """GradIP phenomenon + Virtual-Path Client Selection, visualized.
 
-    PYTHONPATH=src python examples/vpcs_demo.py
+    PYTHONPATH=src python examples/vpcs_demo.py              # full demo
+    PYTHONPATH=src python examples/vpcs_demo.py --steps 60   # CI smoke
 
 The server reconstructs each client's gradient trajectory from uploaded
 scalars + shared seeds (the virtual path), computes GradIP against its
 pre-training gradient, and flags extreme Non-IID clients — printed here as
 ASCII sparklines so the decay-vs-oscillation signature is visible.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +37,11 @@ def spark(x, width=60):
     return "".join(BARS[int(v * (len(BARS) - 1))] for v in m)
 
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200,
+                help="calibration-phase local steps (T)")
+args = ap.parse_args()
+
 spec = TaskSpec()
 model = Model(TINY)
 params = model.init(jax.random.key(0))
@@ -50,13 +58,13 @@ parts = (dirichlet_partition(train["label"], 4, alpha=5.0, seed=0)
 clients = [Client(k, subset(train, p), 32) for k, p in enumerate(parts)]
 kinds = ["balanced"] * 4 + ["single-label"] * 2
 
-T = 200
+T = args.steps
 run = jax.jit(make_local_run(loss, space, eps=1e-3, lr=5e-2))
 keys = round_keys(0, 0, T)
 # thresholds are scale-relative: GradIP magnitudes on the tiny model are
 # ~1e-2 (the paper's sigma=1 suits 1-3B models)
-fl = FLConfig(vp_rho_later=3.0, vp_sigma=0.01, vp_init_steps=40,
-              vp_later_steps=40)
+fl = FLConfig(vp_rho_later=3.0, vp_sigma=0.01, vp_init_steps=min(40, T // 2),
+              vp_later_steps=min(40, T // 2))
 
 print(f"GradIP over {T} local steps (server-side virtual path):\n")
 for c, kind in zip(clients, kinds):

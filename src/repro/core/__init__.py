@@ -11,4 +11,5 @@ from repro.core.virtual_path import (aggregate, reconstruct_delta,
 from repro.core.gradip import gradip_trajectory, pretrain_gradient_vec
 from repro.core.vpcs import VPCSResult, analyze_trajectory, select_clients
 from repro.core.server import Client, CommLog, FederatedZO
-from repro.core.fl_step import make_fl_round_step, make_fl_train_step
+from repro.core.fl_step import (make_fl_round_step, make_fl_train_loop,
+                                make_fl_train_step)

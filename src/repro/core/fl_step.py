@@ -89,7 +89,8 @@ STACK_FORWARDS_MAX_PARAMS = 1 << 20
 def make_fl_train_loop(per_example_loss: Callable, space, *, eps: float,
                        lr: float, n_clients: int, n_steps: int,
                        backend: Optional[str] = None,
-                       stack_forwards: Optional[bool] = None):
+                       stack_forwards: Optional[bool] = None,
+                       constrain_params=None):
     """``n_steps`` T=1 high-frequency MEERKAT steps in one jitted scan —
     the compiled training burst (the serving engine's decode-burst idea
     applied to the train loop: no host round-trip per step).
@@ -105,15 +106,21 @@ def make_fl_train_loop(per_example_loss: Callable, space, *, eps: float,
     single-step calls pay (and that inverted the e2e fused-vs-naive
     comparison on qwen3_4b in BENCH_zo_step) is hoisted; each scanned step
     is exactly one fused dual-perturb pass, the two forwards, and one
-    fused update pass.  For sharded meshes use :func:`make_fl_train_step`
-    (per-step ``constrain_params``) instead.
+    fused update pass.
 
     ``stack_forwards`` picks how the fused route evaluates the (w+, w-)
     pair: True stacks both into one vmapped 2x-batch forward (halves op
     dispatch — wins when the model is small enough that dispatch dominates),
     False runs two sequential forwards (wins once the forwards are
     compute-bound and the 2x-batch matmuls stop fitting cache).  None
-    auto-selects by backed-parameter count (STACK_FORWARDS_MAX_PARAMS)."""
+    auto-selects by backed-parameter count (STACK_FORWARDS_MAX_PARAMS).
+
+    ``constrain_params`` is the mesh route (mirroring
+    :func:`make_fl_train_step`): it re-applies the plan's weight shardings
+    after every sparse scatter inside the scanned burst, and forces
+    ``backend="auto"`` onto the pytree route — the flat carry is not
+    GSPMD-representable for sharded weights (DESIGN.md §perf/§9)."""
+    cp = constrain_params or (lambda p: p)
 
     def loop(params, key, batches):
         backing = get_backing(space, params)
@@ -123,17 +130,18 @@ def make_fl_train_loop(per_example_loss: Callable, space, *, eps: float,
             return (l_plus - l_minus).reshape(n_clients, -1).mean(-1) \
                 / (2.0 * eps)
 
-        if resolve_backend(backend, backing) == "ref":
+        if resolve_backend(backend, backing,
+                           sharded=constrain_params is not None) == "ref":
             def one(p, inp):
                 k, b = inp
                 z = space.sample_z(k)
-                w_plus = space.add(p, eps * z)
+                w_plus = cp(space.add(p, eps * z))
                 l_plus = per_example_loss(w_plus, b)
-                w_minus = space.add(w_plus, (-2.0 * eps) * z)
+                w_minus = cp(space.add(w_plus, (-2.0 * eps) * z))
                 l_minus = per_example_loss(w_minus, b)
                 g_cl = g_of(l_plus, l_minus)
                 g = jnp.mean(g_cl)
-                new_p = space.add(w_minus, (eps - lr * g) * z)
+                new_p = cp(space.add(w_minus, (eps - lr * g) * z))
                 return new_p, (g_cl, (l_plus + l_minus).mean() / 2.0)
 
             p_T, (gs, losses) = jax.lax.scan(one, params, (keys, batches))
@@ -158,18 +166,19 @@ def make_fl_train_loop(per_example_loss: Callable, space, *, eps: float,
                 # the loss side — the small-model bottleneck the flat route
                 # pays twice
                 both = jax.vmap(per_example_loss, in_axes=(0, None))(
-                    jax.vmap(backing.unflatten)(jnp.stack([wp, wm])), b)
+                    jax.vmap(lambda f: cp(backing.unflatten(f)))(
+                        jnp.stack([wp, wm])), b)
                 l_plus, l_minus = both[0], both[1]
             else:
-                l_plus = per_example_loss(backing.unflatten(wp), b)
-                l_minus = per_example_loss(backing.unflatten(wm), b)
+                l_plus = per_example_loss(cp(backing.unflatten(wp)), b)
+                l_minus = per_example_loss(cp(backing.unflatten(wm)), b)
             g_cl = g_of(l_plus, l_minus)
             g = jnp.mean(g_cl)
             new_w = zo_fused_update_flat(w_flat, z_flat, None, -lr * g)
             return (new_w, z_flat), (g_cl, (l_plus + l_minus).mean() / 2.0)
 
         (w_T, _), (gs, losses) = jax.lax.scan(one, (w0, z0), (keys, batches))
-        return (backing.unflatten(w_T), gs,
+        return (cp(backing.unflatten(w_T)), gs,
                 {"loss": losses[-1], "g": gs[-1].mean()})
 
     return loop

@@ -4,19 +4,82 @@ GradIP_t = < grad_f_pretrain , grad_hat_k^t >  where grad_hat_k^t is the
 ZO-reconstructed client gradient.  In sparse coordinates this is simply
 ``g_k^t * dot(gp[mask], z_t)`` — the server never materializes dense
 gradients.
+
+The inner reduction dispatches like the other hot paths
+(``core/dispatch.py`` pattern):
+
+* ``backend="pallas"`` — the blocked Pallas reduction
+  (``kernels/gradip_reduce.py`` via ``kernels/ops.gradip_flat``): ``gp``
+  and each ``z_t`` stream once through a (R, 128)-tiled VMEM accumulator.
+* ``backend="ref"``    — plain ``jnp.dot``; the only route for traced or
+  mesh-sharded ``gp`` vectors (a pallas_call cannot consume a
+  GSPMD-sharded operand, so the sharded server keeps GradIP on the
+  replicated host copy — DESIGN.md §9).
+* ``backend=None``/"auto" picks pallas for concrete single-device
+  vectors, ref otherwise.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 
-def gradip_trajectory(space, keys, gs, gp_vec):
-    """gs: [T] projected gradients; gp_vec: [n] pre-training gradient slice.
+def _resolve_gradip_backend(backend: Optional[str], gp_vec) -> str:
+    """'auto'/None -> 'pallas' | 'ref' for a given [n] gp vector.
 
-    Returns (gradip [T], grad_norm [T], cosine [T])."""
+    Traced values (inside an outer jit) and mesh-committed sharded arrays
+    take the jnp route; concrete single-device vectors take the kernel."""
+    backend = backend or "auto"
+    if backend in ("pallas", "ref"):
+        return backend
+    if backend != "auto":
+        raise ValueError(f"gradip backend must be auto|pallas|ref, "
+                         f"got {backend!r}")
+    if isinstance(gp_vec, jax.core.Tracer):
+        return "ref"
+    try:
+        sharded = len(gp_vec.sharding.device_set) > 1
+    except AttributeError:  # numpy input
+        sharded = False
+    return "ref" if sharded else "pallas"
+
+
+def gradip_trajectory(space, keys, gs, gp_vec,
+                      backend: Optional[str] = None):
+    """Per-step GradIP of one client's virtual path.
+
+    Args:
+      space: the sparse coordinate space (``sample_z`` regenerates each
+        step's direction from the shared seed ladder).
+      keys: [T] PRNG keys (the round's seed list).
+      gs: [T] f32 projected-gradient scalars uploaded by the client
+        (units: loss per unit step along z).
+      gp_vec: [n] f32 pre-training gradient restricted to the space.
+      backend: reduction route, see module docstring.
+
+    Returns (gradip [T], grad_norm [T], cosine [T]) — all f32:
+    ``gradip_t = g_t * <gp, z_t>``, ``grad_norm_t = |g_t| * ||z_t||``
+    (the reconstructed ZO gradient's L2 norm), and the cosine similarity
+    between the reconstructed gradient and ``gp``."""
     gp = gp_vec.astype(jnp.float32)
     gp_norm = jnp.linalg.norm(gp) + 1e-12
+    be = _resolve_gradip_backend(backend, gp_vec)
+
+    if be == "pallas":
+        from repro.kernels.ops import gradip_flat
+
+        def one(_, inp):
+            key, g = inp
+            z = space.sample_z(key)
+            ip = gradip_flat(gp, z, g)
+            gnorm = jnp.abs(g) * jnp.linalg.norm(z)
+            cos = ip / (gp_norm * gnorm + 1e-12)
+            return None, (ip, gnorm, cos)
+
+        _, (ips, norms, coss) = jax.lax.scan(one, None, (keys, gs))
+        return ips, norms, coss
 
     def one(key, g):
         z = space.sample_z(key)
@@ -30,7 +93,17 @@ def gradip_trajectory(space, keys, gs, gp_vec):
 
 
 def pretrain_gradient_vec(loss_fn, params, space, batches):
-    """Server-held pre-training gradient restricted to the space: [n]."""
+    """Server-held pre-training gradient restricted to the space.
+
+    Args:
+      loss_fn: scalar LM loss ``(params, batch) -> f32``.
+      params: parameter pytree (unsharded — the gradient is a first-order
+        calibration pass run once, before any mesh placement).
+      space: sparse coordinate space (``slice`` restricts the gradient).
+      batches: iterable of C4-proxy batches.
+
+    Returns the mean gradient over the batches at the space's
+    coordinates: [n] f32."""
     from repro.models.layers import differentiable_attn
     grad_fn = jax.jit(jax.grad(loss_fn))
     acc = jnp.zeros((space.n,), jnp.float32)

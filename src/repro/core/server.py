@@ -8,10 +8,18 @@ simulation speed, clients with the same local-step count T are executed as a
 single vmapped jit call; the *aggregated update is always computed from the
 server-side virtual-path reconstruction* of the uploaded scalars (exactness
 vs the client-side trajectory is unit-tested).
+
+**Mesh route** (``plan=``, a :class:`repro.sharding.fl.FLShardPlan`): the
+same round executes sharded on a device mesh — parameters per
+``sharding/rules.py`` (FSDP by default), the vmapped client axis over the
+``('pod','data')`` batch axes.  Everything the virtual-path replay consumes
+(seed keys, the [K, T] scalars, GradIP inputs) is gathered to host first,
+so reconstruction, aggregation, GradIP trajectories and VPCS decisions are
+bit-identical to the single-device path (DESIGN.md §9; parity-tested by
+``tools/fl_mesh_parity.py``).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -29,7 +37,10 @@ from repro.core.gradip import gradip_trajectory
 
 class Client:
     """Holds a local dataset and a data pointer (paper §2.5: flagged clients
-    resume from where they stopped so all data is eventually used)."""
+    resume from where they stopped so all data is eventually used).
+
+    ``data``: dict of equally-long numpy arrays (leading dim = examples);
+    ``batch_size``: examples per local step."""
 
     def __init__(self, cid: int, data: Dict[str, np.ndarray], batch_size: int):
         self.cid = cid
@@ -39,7 +50,8 @@ class Client:
         self.n = len(next(iter(data.values())))
 
     def next_batches(self, T: int):
-        """Stack of T batches, advancing the pointer with wraparound."""
+        """Stack of T batches — each value [T, batch_size, ...] — advancing
+        the pointer with wraparound."""
         idx = (self.ptr + np.arange(T * self.batch_size)) % self.n
         self.ptr = int((self.ptr + T * self.batch_size) % self.n)
         sel = {k: v[idx] for k, v in self.data.items()}
@@ -57,6 +69,10 @@ def _per_step(g: np.ndarray) -> np.ndarray:
 
 @dataclass
 class CommLog:
+    """Cumulative FL protocol traffic in **bytes** (f32 scalars = 4 B each;
+    seeds = 8 B).  Counts the paper's client<->server payloads only —
+    intra-mesh collective traffic is measured separately from compiled HLO
+    (``benchmarks/fl_scale_bench.py``)."""
     up_bytes: int = 0
     down_bytes: int = 0
 
@@ -69,17 +85,34 @@ class FederatedZO:
     """Generic sparse-ZO FL server; the ``space`` argument selects the method
     (MEERKAT sensitivity mask / magnitude / random / dense / LoRA).
 
+    Args:
+      loss_fn: scalar client loss ``(params, batch) -> f32`` (mean over the
+        batch).
+      params: initial parameter pytree.  With ``plan`` set it is committed
+        to the mesh per the plan's rule at construction.
+      space: coordinate space (``core/spaces.py``) — defines ``n``, z
+        sampling, and the sparse scatter.
+      fl: :class:`FLConfig` hyper-parameters.
+      clients: the client fleet (``Client`` instances).
+      eval_fn: optional jitted ``(params, batch) -> {metric: f32}``.
+      high_freq: force Alg. 3 downlink accounting; default T==1.
+      plan: optional :class:`repro.sharding.fl.FLShardPlan` — run every
+        client group sharded on the plan's mesh (see module docstring).
+
     The vmapped client loops dispatch through ``fl.zo_backend``
     ("auto" routes the per-step perturb/update through the fused flat
-    Pallas kernels when the layout supports it; see core/dispatch.py)."""
+    Pallas kernels when the layout supports it; see core/dispatch.py).
+    Under a ``plan`` the auto backend resolves to the pytree route, whose
+    N-D scatters keep weight leaves sharded."""
 
     def __init__(self, loss_fn: Callable, params, space, fl: FLConfig,
                  clients: Sequence[Client], eval_fn: Optional[Callable] = None,
-                 high_freq: Optional[bool] = None):
+                 high_freq: Optional[bool] = None, plan=None):
         self.loss_fn = loss_fn
-        self.params = params
         self.space = space
         self.fl = fl
+        self.plan = plan
+        self.params = params if plan is None else plan.place_params(params)
         self.backend = getattr(fl, "zo_backend", "auto")
         self.clients = list(clients)
         self.eval_fn = eval_fn
@@ -100,20 +133,45 @@ class FederatedZO:
     # (T, group width); the width feeds the auto backend's dense-carry
     # budget, so a small early-stopped group isn't penalized for the
     # fleet size) ------------------------------------------------------
-    def _batch_run_for(self, T: int, n_group: int):
+    def _batch_run_for(self, T: int, n_group: int, template_batches=None):
+        """Jitted ``(params, keys [T], batches [K, T, b, ...]) ->
+        (deltas [K, n], gs [K, T] or [K, T, n_dirs])`` for a group of
+        ``n_group`` same-T clients.
+
+        Clients are processed with ``jax.lax.map`` — each client's T-step
+        loop runs as an *unbatched* program, so the per-client bits are
+        independent of group width and of how the client axis is sharded
+        (the mesh-parity invariant; DESIGN.md §9).  Under a ``plan`` the
+        group is wrapped in ``shard_map`` (``FLShardPlan.shard_group``):
+        client axis over the mesh batch axes, parameters gathered at round
+        entry.  ``rule="tp"`` instead keeps GSPMD tensor-parallel compute
+        (``compute_view``) — allclose-level parity only."""
         key = (T, n_group)
         if key not in self._batch_runs:
             run = ZO.make_local_run(self.loss_fn, self.space, self.fl.eps,
                                     self.fl.lr,
                                     n_dirs=getattr(self.fl, "n_dirs", 1),
                                     backend=self.backend,
-                                    n_carries=n_group)
+                                    n_carries=n_group,
+                                    sharded=self.plan is not None)
 
             def group(params, keys, batches):
                 zeros = jnp.zeros((self.space.n,), jnp.float32)
-                return jax.vmap(lambda b: run(params, keys, b, zeros))(batches)
+                return jax.lax.map(lambda b: run(params, keys, b, zeros),
+                                   batches)
 
-            self._batch_runs[key] = jax.jit(group)
+            if self.plan is None:
+                self._batch_runs[key] = jax.jit(group)
+            elif self.plan.rule == "tp":
+                def group_tp(params, keys, batches):
+                    return group(self.plan.compute_view(params), keys,
+                                 batches)
+                self._batch_runs[key] = jax.jit(group_tp)
+            else:
+                n_dirs = getattr(self.fl, "n_dirs", 1)
+                self._batch_runs[key] = jax.jit(self.plan.shard_group(
+                    group, template_batches, n_group,
+                    out_ndims=(2, 3 if n_dirs > 1 else 2)))
         return self._batch_runs[key]
 
     def _client_T(self, cid: int) -> int:
@@ -124,8 +182,24 @@ class FederatedZO:
         return {k: jnp.asarray(np.stack([b[k] for b in batch_list]))
                 for k in batch_list[0]}
 
+    def _place_group(self, keys, batches, n_group: int):
+        """Mesh route: commit the group's inputs — keys replicated, the
+        stacked batches' client axis over ('pod','data')."""
+        if self.plan is None:
+            return keys, batches
+        return (self.plan.place_replicated(keys),
+                self.plan.place_client_batches(batches, n_group))
+
     # -- one federated round (Alg. 2) ---------------------------------------
     def run_round(self, gp_vec=None):
+        """Execute one round: group clients by local-step count T, run each
+        group's local ZO loops (vmapped; sharded under a ``plan``), account
+        the scalar uploads, reconstruct every client's virtual path from
+        (seed list, scalars) on the host, aggregate, and apply the update.
+
+        ``gp_vec`` ([n] pre-training gradient): also log each client's
+        GradIP trajectory for this round.  Returns {cid: gs [T] or
+        [T, n_dirs]} — the scalars each client uploaded."""
         r = self.round
         groups: Dict[int, List[Client]] = {}
         for c in self.clients:
@@ -134,13 +208,17 @@ class FederatedZO:
         for T, cs in groups.items():
             keys = S.round_keys(self.fl.seed, r, T)
             batches = self._stack([c.next_batches(T) for c in cs])
+            grp = self._batch_run_for(T, len(cs), template_batches=batches)
+            keys_d, batches = self._place_group(keys, batches, len(cs))
             # (1) clients run T local ZO steps; upload the scalars g_k^{1..T}
-            _, gs = self._batch_run_for(T, len(cs))(self.params, keys,
-                                                     batches)
+            _, gs = grp(self.params, keys_d, batches)
             # (2) server reconstructs each client's virtual path from
-            #     (seed list, scalars) — no data, no dense vectors.
-            deltas.append(self._recon(keys, gs))
-            for c, g in zip(cs, np.asarray(gs)):
+            #     (seed list, scalars) — no data, no dense vectors.  The
+            #     scalars are gathered to host first so replay/aggregation
+            #     run identically under any mesh shape (DESIGN.md §9).
+            gs = np.asarray(gs)
+            deltas.append(np.asarray(self._recon(keys, jnp.asarray(gs))))
+            for c, g in zip(cs, gs):
                 gs_by_cid[c.cid] = g
                 # upload = every projected-gradient scalar: T with n_dirs=1,
                 # T*K for the multi-direction estimator ([T, K] gs)
@@ -152,17 +230,21 @@ class FederatedZO:
                     self.gradip_log[c.cid].append(np.asarray(ips))
         # (3) aggregate reconstructed sparse updates (+ optional FedAvgM
         # server momentum on the sparse value vector — beyond-paper)
-        agg = VP.aggregate(jnp.concatenate(deltas, axis=0))
+        agg = VP.aggregate(jnp.concatenate([jnp.asarray(d) for d in deltas],
+                                           axis=0))
         if self.fl.server_momentum > 0.0:
             self.velocity = (agg if self.velocity is None
                              else self.fl.server_momentum * self.velocity
                              + agg)
             agg = self.velocity
+        if self.plan is not None:
+            agg = self.plan.place_replicated(agg)
         self.params = self.space.add(self.params, agg)
         self.round += 1
         return gs_by_cid
 
     def _down_bytes(self, T: int) -> int:
+        """Per-client downlink bytes for a T-step round (Alg. 2/3)."""
         if self.high_freq:
             # aggregated scalars + next seed; with the K-direction
             # estimator clients replay mean_k g_tk * z_tk, so all T*K
@@ -172,13 +254,22 @@ class FederatedZO:
 
     # -- calibration + VPCS (MEERKAT-VP, Alg. 1) ----------------------------
     def calibrate_vp(self, gp_vec, T_cali: Optional[int] = None):
-        """Run the calibration phase, analyze GradIP trajectories, flag
-        extreme Non-IID clients for early stopping."""
+        """Run the calibration phase (round index -1 in the seed ladder),
+        analyze GradIP trajectories, flag extreme Non-IID clients for
+        early stopping.
+
+        ``gp_vec``: [n] pre-training gradient at the space coordinates;
+        ``T_cali``: calibration steps (default
+        ``fl.vp_calibration_steps``).  Returns (results
+        [:class:`repro.core.vpcs.VPCSResult` per client], flagged client
+        id list, trajectories [list of GradIP [T_cali] arrays])."""
         T = T_cali or self.fl.vp_calibration_steps
         keys = S.round_keys(self.fl.seed, -1, T)
         batches = self._stack([c.next_batches(T) for c in self.clients])
-        _, gs = self._batch_run_for(T, len(self.clients))(self.params,
-                                                           keys, batches)
+        grp = self._batch_run_for(T, len(self.clients),
+                                  template_batches=batches)
+        keys_d, batches = self._place_group(keys, batches, len(self.clients))
+        _, gs = grp(self.params, keys_d, batches)
         trajs = []
         for c, g in zip(self.clients, np.asarray(gs)):
             ips, _, _ = gradip_trajectory(self.space, keys,
@@ -198,6 +289,9 @@ class FederatedZO:
     # -- training loop -------------------------------------------------------
     def run(self, rounds: int, eval_every: int = 0, eval_batch=None,
             gp_vec=None, verbose: bool = False):
+        """Run ``rounds`` federated rounds; evaluate every ``eval_every``
+        rounds with ``eval_fn(params, eval_batch)``.  Returns the history
+        list of metric dicts (each tagged with its round index)."""
         for _ in range(rounds):
             self.run_round(gp_vec=gp_vec)
             if eval_every and self.round % eval_every == 0 \

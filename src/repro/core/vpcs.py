@@ -20,6 +20,13 @@ from repro.configs.base import FLConfig
 
 @dataclass
 class VPCSResult:
+    """Per-client VPCS verdict.
+
+    ``rho_later``: mean |GradIP| over the initial phase divided by the
+    later-phase mean (dimensionless; > ``fl.vp_rho_later`` flags).
+    ``rho_quie``: fraction of later-phase steps with |GradIP| below sigma
+    (in [0, 1]; > ``fl.vp_rho_quie`` flags).
+    ``flagged``: client is extreme Non-IID — early-stop to T=1."""
     rho_later: float
     rho_quie: float
     flagged: bool
@@ -27,6 +34,11 @@ class VPCSResult:
 
 def analyze_trajectory(gradip: np.ndarray, fl: FLConfig) -> VPCSResult:
     """Apply Alg. 1 steps 2-3 to one client's GradIP trajectory.
+
+    ``gradip``: [T_cali] GradIP scalars (units: squared-gradient inner
+    product — loss²/param²; only relative magnitudes matter, |.| is taken
+    internally).  Phase lengths come from ``fl.vp_init_steps`` /
+    ``fl.vp_later_steps``, clamped to the trajectory length.
 
     With ``fl.vp_sigma_relative`` the quiescence threshold is
     ``vp_sigma * mean(|GradIP|) over the initial phase`` instead of the
@@ -47,7 +59,11 @@ def analyze_trajectory(gradip: np.ndarray, fl: FLConfig) -> VPCSResult:
 
 
 def select_clients(trajectories: Sequence[np.ndarray], fl: FLConfig):
-    """Returns (results list, flagged client id list)."""
+    """Apply :func:`analyze_trajectory` to every client.
+
+    ``trajectories``: one [T_cali] GradIP array per client, indexed by
+    client id.  Returns (results: [VPCSResult per client], flagged:
+    sorted list of flagged client ids)."""
     results = [analyze_trajectory(t, fl) for t in trajectories]
     flagged = [k for k, r in enumerate(results) if r.flagged]
     return results, flagged

@@ -62,10 +62,15 @@ def _multi_dir_update(loss_fn, backing, space, base_flat, key, eps: float,
 
 
 def projected_gradient(loss_fn: Callable, params, space, delta, z, eps: float,
-                       batch, backend: Optional[str] = None):
-    """Scalar projected gradient g at (params + delta) along z."""
+                       batch, backend: Optional[str] = None,
+                       sharded: bool = False):
+    """Scalar projected gradient g at (params + delta) along z.
+
+    ``sharded=True`` declares that ``params`` live sharded on a mesh, so
+    ``backend="auto"`` resolves to the pytree route (the flat reshape is
+    not GSPMD-representable; see core/dispatch.py)."""
     backing = get_backing(space, params)
-    if resolve_backend(backend, backing) == "ref":
+    if resolve_backend(backend, backing, sharded=sharded) == "ref":
         lp = loss_fn(space.add(params, delta + eps * z), batch)
         lm = loss_fn(space.add(params, delta - eps * z), batch)
         return (lp - lm) / (2.0 * eps)
@@ -77,7 +82,7 @@ def projected_gradient(loss_fn: Callable, params, space, delta, z, eps: float,
 
 def local_step(loss_fn: Callable, params, space, delta, key, eps: float,
                lr: float, batch, n_dirs: int = 1,
-               backend: Optional[str] = None):
+               backend: Optional[str] = None, sharded: bool = False):
     """One client-side ZO step on the sparse delta. Returns (delta', g).
 
     ``n_dirs > 1`` (beyond-paper) averages the estimator over K independent
@@ -87,7 +92,7 @@ def local_step(loss_fn: Callable, params, space, delta, key, eps: float,
     keys derive from the shared step key (``reconstruct_delta`` accepts
     gs of shape [T, K]).  n_dirs=1 is exactly the paper's Eq. 1 step."""
     backing = get_backing(space, params)
-    if resolve_backend(backend, backing) == "ref":
+    if resolve_backend(backend, backing, sharded=sharded) == "ref":
         return _local_step_ref(loss_fn, params, space, delta, key, eps, lr,
                                batch, n_dirs)
 
@@ -125,13 +130,16 @@ def _local_step_ref(loss_fn, params, space, delta, key, eps, lr, batch,
 
 def make_local_run(loss_fn: Callable, space, eps: float, lr: float,
                    n_dirs: int = 1, backend: Optional[str] = None,
-                   n_carries: int = 1):
+                   n_carries: int = 1, sharded: bool = False):
     """Jittable T-step client loop.
 
     batches: pytree with leading [T, ...]; keys: [T] PRNG keys.
     Returns (delta_T [n], gs [T]) (gs: [T, K] when n_dirs > 1).
     ``n_carries``: how many copies of this run will be vmapped at once
     (clients) — the auto backend budgets its dense flat carries by it.
+    ``sharded=True`` (the mesh route of ``FederatedZO``) forces
+    ``backend="auto"`` onto the pytree route, whose N-D scatters keep the
+    weight leaves sharded (DESIGN.md §9).
 
     On the pallas backend the flat parameter vector is built ONCE outside
     the scan and the scan carries the *dense* flat delta, so every local
@@ -140,7 +148,7 @@ def make_local_run(loss_fn: Callable, space, eps: float, lr: float,
 
     def run(params, keys, batches, delta0):
         backing = get_backing(space, params)
-        if resolve_backend(backend, backing,
+        if resolve_backend(backend, backing, sharded=sharded,
                            dense_carry=max(1, n_carries)) == "ref":
             def step(delta, inp):
                 key, batch = inp

@@ -24,10 +24,9 @@ Usage:
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +37,8 @@ from repro.configs.base import EncoderConfig, InputShape, MeshConfig, ModelConfi
 from repro.core.fl_step import make_fl_train_step
 from repro.core.masks import abstract_mask
 from repro.core.spaces import MaskedSpace
+from repro.launch.hlo_tools import (COLLECTIVE_FACTOR,  # noqa: F401
+                                    COLLECTIVE_OPS, collective_bytes)
 from repro.launch.mesh import make_mesh_from_config, mesh_config
 from repro.models import abstract_cache, abstract_params, decode_step, prefill
 from repro.models.init import active_param_count, param_count
@@ -52,39 +53,9 @@ DTYPE = jnp.bfloat16
 FL_EPS = 1e-3
 FL_LR = 1e-4
 
-COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                  "collective-permute")
-# per-device traffic multiplier relative to the op's output bytes (ring algs)
-COLLECTIVE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
-                     "reduce-scatter": 1.0, "all-to-all": 1.0,
-                     "collective-permute": 1.0}
-_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-                "f64": 8, "c64": 8, "c128": 16}
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Sum output bytes of every collective op in (per-device) HLO text."""
-    out = {op: 0.0 for op in COLLECTIVE_OPS}
-    for line in hlo_text.splitlines():
-        m = re.search(r"=\s*(\(?[\w\[\],{}\s/#*]*?)\s*(all-reduce|all-gather|"
-                      r"reduce-scatter|all-to-all|collective-permute)"
-                      r"(-start|-done)?\(", line)
-        if not m or (m.group(3) == "-done"):
-            continue
-        shapes_str, op = m.group(1), m.group(2)
-        total = 0.0
-        for dt, dims in _SHAPE_RE.findall(shapes_str):
-            if dt not in _DTYPE_BYTES:
-                continue
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            total += n * _DTYPE_BYTES[dt]
-        out[op] += total
-    return out
+# collective-byte extraction lives in launch/hlo_tools.py (shared with
+# benchmarks/fl_scale_bench.py); re-exported under the historical name
+parse_collective_bytes = collective_bytes
 
 
 def _shallow_cfg(cfg: ModelConfig, n: int) -> ModelConfig:
@@ -92,6 +63,16 @@ def _shallow_cfg(cfg: ModelConfig, n: int) -> ModelConfig:
     if cfg.encoder is not None:
         kw["encoder"] = dataclasses.replace(cfg.encoder, n_layers=n)
     return cfg.replace(**kw)
+
+
+def _cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: older
+    releases return a per-device list of dicts, newer ones a single dict
+    (or None when the backend offers no analysis)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return ca or {}
 
 
 def _largest_block(S: int, target: int) -> int:
@@ -264,7 +245,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool,
                                   + ma.temp_size_in_bytes
                                   - ma.alias_size_in_bytes),
         }
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_analysis(compiled)
         rec["cost_full_scan"] = {"flops": float(ca.get("flops", 0.0)),
                                  "bytes": float(ca.get("bytes accessed", 0.0))}
         rec["collectives_full_scan"] = parse_collective_bytes(
@@ -278,7 +259,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool,
                 jfn, argsn = build_lowerable(cfg_n, shape, mesh, mc,
                                              step_kind, unroll_all=True)
                 cn = jfn.lower(*argsn).compile()
-                can = cn.cost_analysis() or {}
+                can = _cost_analysis(cn)
                 pts[n] = {
                     "flops": float(can.get("flops", 0.0)),
                     "bytes": float(can.get("bytes accessed", 0.0)),

@@ -19,8 +19,13 @@ _DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
                 "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
                 "f64": 8, "c64": 8, "c128": 16}
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-       "collective-permute", "copy", "dynamic-update-slice", "dynamic-slice")
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+# per-device traffic multiplier relative to the op's output bytes (ring algs)
+COLLECTIVE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
+                     "reduce-scatter": 1.0, "all-to-all": 1.0,
+                     "collective-permute": 1.0}
+OPS = COLLECTIVE_OPS + ("copy", "dynamic-update-slice", "dynamic-slice")
 
 
 def shape_bytes(shapes_str: str) -> int:
@@ -34,6 +39,24 @@ def shape_bytes(shapes_str: str) -> int:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
     return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in (per-device) HLO text.
+
+    Returns ``{op: bytes}`` over :data:`COLLECTIVE_OPS` (async ``-start``
+    forms counted once, ``-done`` forms skipped).  Used by the dry-run's
+    roofline extraction and ``benchmarks/fl_scale_bench.py``; multiply by
+    :data:`COLLECTIVE_FACTOR` for ring-algorithm wire traffic."""
+    out = {op: 0.0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(\(?[\w\[\],{}\s/#*]*?)\s*(all-reduce|all-gather|"
+                      r"reduce-scatter|all-to-all|collective-permute)"
+                      r"(-start|-done)?\(", line)
+        if not m or (m.group(3) == "-done"):
+            continue
+        out[m.group(2)] += shape_bytes(m.group(1))
+    return out
 
 
 def top_ops(hlo_text: str, ops=OPS, top: int = 20

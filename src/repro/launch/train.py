@@ -7,10 +7,18 @@ mask calibration from the C4-proxy corpus, per-round seed ladders, client
 local ZO steps, server virtual-path reconstruction and aggregation, and
 optional MEERKAT-VP calibration + early stopping.
 
+``--mesh DxM`` runs every round sharded on a device mesh
+(``sharding/fl.FLShardPlan``): parameters per ``sharding/rules.py``
+(``--mesh-rule``, FSDP by default), the client axis over the mesh batch
+axes.  On a CPU host the requested device count is forced via XLA_FLAGS
+*before* jax is imported (pre-parsed from argv below); on TPU the same
+spec maps onto the physical topology.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --rounds 40 --T 10
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --method full
   PYTHONPATH=src python -m repro.launch.train --vp --partition mixed
+  PYTHONPATH=src python -m repro.launch.train --mesh 2x2 --rounds 4
 """
 from __future__ import annotations
 
@@ -18,10 +26,40 @@ import argparse
 import dataclasses
 import json
 import os
+import sys
 import time
 
-import jax
-import numpy as np
+
+def _force_mesh_devices(argv):
+    """If --mesh asks for more devices than the host platform exposes,
+    force the count via XLA_FLAGS.  Runs before the first jax import —
+    device count is fixed at backend initialization.  (Importing
+    launch.mesh here is safe: it touches no jax device state.)"""
+    spec = None
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            spec = argv[i + 1]
+        elif a.startswith("--mesh="):
+            spec = a.split("=", 1)[1]
+    if not spec:
+        return
+    if "--xla_force_host_platform_device_count" in \
+            os.environ.get("XLA_FLAGS", ""):
+        return
+    from repro.launch.mesh import host_device_flag, parse_mesh_spec
+    try:
+        n = parse_mesh_spec(spec).n_devices
+    except ValueError:
+        return  # argparse will reject the spec with a proper error
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " " + host_device_flag(n)).strip()
+
+
+_force_mesh_devices(sys.argv[1:])
+
+import jax  # noqa: E402  (after the XLA_FLAGS pre-parse, by design)
+import numpy as np  # noqa: E402
 
 from repro.configs import get_config
 from repro.configs.base import FLConfig
@@ -74,6 +112,15 @@ def main():
     ap.add_argument("--attn-backend", default="auto",
                     choices=["auto", "pallas", "online", "dense"],
                     help="forward-attention route for the ZO loss forwards")
+    ap.add_argument("--mesh", default=None,
+                    help="run rounds sharded on a device mesh: DxM / PxDxM "
+                         "host devices (e.g. 2x2), or single|multi for the "
+                         "production 16x16 / 2x16x16 topologies")
+    ap.add_argument("--mesh-rule", default="fsdp",
+                    choices=["fsdp", "tp", "replicate"],
+                    help="parameter sharding rule under --mesh "
+                         "(sharding/fl.py; fsdp is bit-exact vs single "
+                         "device, tp is allclose-level)")
     ap.add_argument("--vp", action="store_true",
                     help="MEERKAT-VP: calibrate GradIP + early-stop")
     ap.add_argument("--eval-every", type=int, default=5)
@@ -85,6 +132,12 @@ def main():
         cfg = cfg.replace(lora_rank=4)
     spec = TaskSpec(vocab=min(cfg.vocab, 512), seq_len=16)
     ctx = dataclasses.replace(DEFAULT_CTX, attn_backend=a.attn_backend)
+    plan = None
+    if a.mesh:
+        from repro.sharding.fl import make_fl_plan
+        plan = make_fl_plan(spec=a.mesh, rule=a.mesh_rule)
+        print(f"mesh: {a.mesh} ({plan.mesh_cfg.n_devices} devices, "
+              f"rule={a.mesh_rule}, client axis over {plan.batch_axes})")
     model = Model(cfg, ctx=ctx)
     print(f"arch={cfg.name} params={model.n_params:,} method={a.method}")
 
@@ -121,7 +174,8 @@ def main():
                   batch_size=a.batch, vp_calibration_steps=100,
                   vp_init_steps=20, vp_later_steps=20, vp_rho_later=2.0,
                   vp_sigma=0.25, vp_sigma_relative=True)
-    server = FederatedZO(loss, params, space, fl, clients, eval_fn=evaluate)
+    server = FederatedZO(loss, params, space, fl, clients, eval_fn=evaluate,
+                         plan=plan)
 
     if a.vp:
         gp = pretrain_gradient_vec(lm_loss_fn, params, space, pre)

@@ -1,0 +1,97 @@
+"""Docs-consistency check: every CLI flag documented in README.md exists
+in the corresponding argparse, and every argparse flag is documented.
+
+Pure text processing (no jax import).  Conventions checked:
+
+* README has one flag table per CLI, introduced by a heading containing
+  the module path, e.g. ``### \`repro.launch.train\` flags``; table rows
+  start with ``| \`--flag\` ...``.
+* The source defines flags via ``ap.add_argument("--flag", ...)``.
+
+Also verifies every file referenced in the README "Examples" table
+exists.  Exit code 0 iff consistent.
+
+    python tools/check_docs.py            # check
+    python tools/check_docs.py --list     # dump both sides per CLI
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+CLIS = {
+    "repro.launch.train": "src/repro/launch/train.py",
+    "repro.launch.serve": "src/repro/launch/serve.py",
+}
+
+
+def argparse_flags(path: str) -> set:
+    src = open(os.path.join(REPO, path)).read()
+    return set(re.findall(r'add_argument\(\s*"(--[A-Za-z0-9-]+)"', src))
+
+
+def readme_sections(readme: str):
+    """Split README into (heading, body) chunks at any heading level."""
+    parts = re.split(r"^(#{1,6} .*)$", readme, flags=re.M)
+    for i in range(1, len(parts) - 1, 2):
+        yield parts[i], parts[i + 1]
+
+
+def readme_flags(readme: str, module: str) -> set:
+    for heading, body in readme_sections(readme):
+        if module in heading and "flag" in heading.lower():
+            return set(re.findall(r"^\|\s*`(--[A-Za-z0-9-]+)", body, re.M))
+    return set()
+
+
+def readme_example_paths(readme: str) -> list:
+    return re.findall(r"`(examples/[a-z_0-9]+\.py)`", readme)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true")
+    a = ap.parse_args()
+    readme = open(os.path.join(REPO, "README.md")).read()
+    ok = True
+    for module, path in CLIS.items():
+        doc = readme_flags(readme, module)
+        src = argparse_flags(path)
+        if a.list:
+            print(f"{module}: documented={sorted(doc)} defined={sorted(src)}")
+        if not doc:
+            print(f"FAIL {module}: no flag table found in README "
+                  f"(want a heading like '### `{module}` flags')")
+            ok = False
+            continue
+        for missing in sorted(doc - src):
+            print(f"FAIL {module}: README documents {missing} but "
+                  f"{path} does not define it")
+            ok = False
+        for undoc in sorted(src - doc):
+            print(f"FAIL {module}: {path} defines {undoc} but the README "
+                  f"flag table omits it")
+            ok = False
+        if doc == src:
+            print(f"ok   {module}: {len(src)} flags consistent")
+    paths = readme_example_paths(readme)
+    for p in sorted(set(paths)):
+        if not os.path.exists(os.path.join(REPO, p)):
+            print(f"FAIL README references missing file {p}")
+            ok = False
+    missing_refs = [f for f in sorted(os.listdir(os.path.join(REPO,
+                                                              "examples")))
+                    if f.endswith(".py") and f"examples/{f}" not in paths]
+    for f in missing_refs:
+        print(f"FAIL examples/{f} is not referenced from README")
+        ok = False
+    if ok:
+        print(f"ok   README references all {len(set(paths))} examples")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
