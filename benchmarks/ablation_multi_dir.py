@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks import common as C
 from repro.core import make_local_run, round_keys

@@ -30,11 +30,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
+from repro.analysis import check_no_dense_intermediates
 from repro.configs import get_config
 from repro.configs.tiny import TINY
 from repro.models import Model
 from repro.models.transformer import ShardCtx, lm_loss
-from repro.utils import max_square_dims
 
 BACKENDS = ("dense", "online", "pallas")
 
@@ -108,7 +108,7 @@ def bench_row(cfg, S: int, seed: int, reps: int) -> dict:
     for be in ("online", "pallas"):
         jx = jax.make_jaxpr(lambda q, k, v, b=be: L.forward_attention(
             q, k, v, cfg, None, backend=b))(q, kv, kv)
-        no_ss[be] = max_square_dims(jx, S) < 2
+        no_ss[be] = not check_no_dense_intermediates(jx, S)
 
     tol = 5e-2  # ZO g-scalars difference; prefill logits are tighter
     parity_ok = (all(e < 1e-2 for e in pf_err.values())

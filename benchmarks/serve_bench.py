@@ -27,8 +27,7 @@ from benchmarks import common as C
 from repro.configs import get_config
 from repro.configs.tiny import TINY
 from repro.models import Model
-from repro.serving.engine import (ContinuousBatchingEngine, ServeEngine,
-                                  generate)
+from repro.serving.engine import ContinuousBatchingEngine, ServeEngine
 
 
 def _workload(cfg, n_requests: int, seed: int):

@@ -21,7 +21,7 @@ import argparse
 
 from benchmarks import common as C
 from repro.configs.base import FLConfig
-from repro.core import DenseSpace, FederatedZO
+from repro.core import FederatedZO
 
 
 def run(quick: bool = True, seed: int = 0) -> dict:

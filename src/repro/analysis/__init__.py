@@ -1,0 +1,42 @@
+"""Rule-based static analysis over jaxprs and compiled HLO (DESIGN.md
+§10): prove the hot-path invariants the repo's perf claims rest on —
+no dense [S, S]/[K, P] intermediates, no dtype drift, no host syncs,
+no steady-state retraces, collective bytes within the FL comm budget,
+peak-bytes/VMEM ceilings.
+
+Entry points: ``python -m repro.analysis`` (CLI over the registered hot
+paths in ``registry.py``), :data:`ALL_RULES` / :data:`HOT_PATHS` for
+programmatic use, and :func:`check_no_dense_intermediates` /
+:func:`max_square_dims` as the standalone jaxpr predicates tests and
+benchmarks call.
+
+Attribute access is lazy (PEP 562) so importing ``repro.analysis`` does
+not import jax — ``__main__`` must set the forced host device count
+first.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "Artifacts": "core", "Built": "core", "Finding": "core",
+    "Program": "core", "ProgramSkip": "core", "Rule": "core",
+    "run_analysis": "core", "run_program": "core", "write_report": "core",
+    "ALL_RULES": "rules", "rules_by_name": "rules",
+    "check_no_dense_intermediates": "rules",
+    "HOT_PATHS": "registry", "programs_by_name": "registry",
+    "FIXTURES": "fixtures",
+    "max_square_dims": "walk", "square_dim_findings": "walk",
+    "liveness_peak_bytes": "walk", "pallas_block_records": "walk",
+    "iter_eqns": "walk", "aval_bytes": "walk",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute "
+                             f"{name!r}")
+    return getattr(importlib.import_module(f"repro.analysis.{mod}"), name)

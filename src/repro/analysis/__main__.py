@@ -1,0 +1,31 @@
+"""``python -m repro.analysis`` — run the hot-path static analyzer.
+
+The sharded-round program needs a 2x2 mesh, so the host device count is
+forced (``--devices``, default 8) BEFORE anything imports jax; the
+actual CLI lives in ``cli.py`` and is imported only after the env is
+set (the package ``__init__`` is lazy for the same reason).
+"""
+import os
+import sys
+
+
+def _preparse_devices(argv) -> int:
+    for i, arg in enumerate(argv):
+        if arg == "--devices" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if arg.startswith("--devices="):
+            return int(arg.split("=", 1)[1])
+    return 8
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={_preparse_devices(argv)}")
+    from repro.analysis.cli import run_cli
+    return run_cli(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

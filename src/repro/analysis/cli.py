@@ -1,0 +1,143 @@
+"""CLI body for ``python -m repro.analysis`` (and
+``tools/analyze_hotpaths.py``).
+
+Kept separate from ``__main__`` so the device-count env setup there runs
+before anything imports jax.  Exit codes: 0 = all invariants hold,
+1 = violations (or a failed selftest), 2 = internal analyzer error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+DEFAULT_OUT = "runs/analysis/ANALYSIS.json"
+SMOKE_OUT = "runs/analysis/ANALYSIS_smoke.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis of the registered hot paths: jaxpr/"
+                    "HLO rules proving the repo's structural invariants.")
+    ap.add_argument("--all", action="store_true",
+                    help="run every rule over every registered hot path "
+                         "(the default when no mode flag is given)")
+    ap.add_argument("--programs", default=None,
+                    help="comma-separated registry subset")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset")
+    ap.add_argument("--out", default=None,
+                    help=f"report path (default {DEFAULT_OUT})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: also run the fixture selftest and save "
+                         "under ANALYSIS_smoke.json so the committed "
+                         "artifact is never clobbered")
+    ap.add_argument("--selftest", action="store_true",
+                    help="check every rule flags its known-bad fixture and "
+                         "passes its known-good twin, then exit")
+    ap.add_argument("--fixture", default=None, metavar="RULE",
+                    help="run RULE over its seeded known-bad fixture(s); "
+                         "exits non-zero iff the rule (correctly) fires")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered programs and rules, then exit")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="host device count to force before importing jax "
+                         "(the sharded round needs >= 4)")
+    return ap
+
+
+def _selftest(rules) -> bool:
+    from repro.analysis.core import run_program
+    from repro.analysis.fixtures import FIXTURES
+    ok = True
+    for rule in rules:
+        fx = FIXTURES.get(rule.name)
+        if fx is None:
+            print(f"FAIL {rule.name}: no fixtures registered")
+            ok = False
+            continue
+        for kind, want_errors in (("bad", True), ("good", False)):
+            for prog in fx[kind]:
+                rows = run_program(prog, [rule])
+                errors = [f for r in rows for f in r["findings"]
+                          if f["severity"] == "error"]
+                good = bool(errors) == want_errors
+                ok = ok and good
+                print(f"{'ok  ' if good else 'FAIL'} {rule.name:22s} "
+                      f"{prog.name:32s} errors={len(errors)} "
+                      f"(want {'>=1' if want_errors else '0'})")
+    print("selftest:", "ok" if ok else "FAIL")
+    return ok
+
+
+def run_cli(argv=None) -> int:
+    a = build_parser().parse_args(argv)
+    try:
+        return _dispatch(a)
+    except (KeyError, FileNotFoundError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    except Exception:
+        traceback.print_exc()
+        return 2
+
+
+def _dispatch(a) -> int:
+    from repro.analysis.core import run_analysis, write_report
+    from repro.analysis.registry import programs_by_name
+    from repro.analysis.rules import rules_by_name
+    rules = rules_by_name(a.rules.split(",") if a.rules else None)
+
+    if a.list:
+        from repro.analysis.registry import HOT_PATHS
+        from repro.analysis.rules import ALL_RULES
+        print("programs:")
+        for p in HOT_PATHS:
+            print(f"  {p.name:18s} {p.description}")
+        print("rules:")
+        for r in ALL_RULES:
+            print(f"  {r.name:22s} {r.description}")
+        return 0
+
+    if a.selftest:
+        return 0 if _selftest(rules) else 1
+
+    if a.fixture:
+        from repro.analysis.fixtures import FIXTURES
+        if a.fixture not in FIXTURES:
+            raise KeyError(f"no fixtures for rule {a.fixture!r}; "
+                           f"have {sorted(FIXTURES)}")
+        programs = FIXTURES[a.fixture]["bad"]
+        rules = rules_by_name([a.fixture])
+    else:
+        programs = programs_by_name(
+            a.programs.split(",") if a.programs else None)
+
+    report = run_analysis(programs, rules)
+    for row in report["results"]:
+        findings = row["findings"]
+        errs = sum(1 for f in findings if f["severity"] == "error")
+        if row.get("skipped"):
+            status, extra = "skip", row["skipped"]
+        elif errs:
+            status, extra = "FAIL", f"{errs} violation(s)"
+        else:
+            status, extra = "ok  ", ""
+        print(f"{status} {row['program']:28s} {row['rule']:22s} {extra}")
+        for f in findings:
+            if f["severity"] == "error":
+                print(f"     - {f['message']}")
+
+    if a.fixture:
+        print(f"fixture '{a.fixture}': {report['violations']} violation(s)")
+        return 1 if report["violations"] else 0
+
+    out = a.out or (SMOKE_OUT if a.smoke else DEFAULT_OUT)
+    path = write_report(report, out)
+    print(f"{report['violations']} violation(s) across "
+          f"{len(report['programs'])} program(s) x "
+          f"{len(report['rules'])} rule(s); wrote {path}")
+    if a.smoke and not _selftest(rules):
+        return 1
+    return 0 if report["ok"] else 1

@@ -1,0 +1,172 @@
+"""Analysis framework: programs, artifacts, rules, runner, report.
+
+A :class:`Program` is a registered hot path (``registry.py``) or fixture
+(``fixtures.py``): its ``build()`` returns a :class:`Built` — a jittable
+callable with concrete tiny arguments plus a ``meta`` dict carrying the
+per-program rule configuration (thresholds, budgets, allowlists).
+
+:class:`Artifacts` lazily derives what rules declare via ``needs``:
+``"jaxpr"`` (``jax.make_jaxpr``), ``"hlo"`` (lower + compile +
+``as_text()``), ``"runtime"`` (the built callable + args, for the
+recompile trace harness).  A fixture can pre-seed any artifact through
+``Built.overrides`` — e.g. synthetic HLO text for the comm-budget bad
+twin, so its self-test needs no multi-device mesh.
+
+The runner produces one JSON-stable report (``schema_version`` 1):
+``results`` rows are ``(program, rule)`` pairs with ``ok``, ``findings``
+(severity ``"error"`` gates the exit code, ``"warning"`` is informative)
+and a ``skipped`` reason when a program can't build here or a rule doesn't
+apply to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable, Dict, List, Optional, Sequence
+
+SCHEMA_VERSION = 1
+
+
+class ProgramSkip(Exception):
+    """Raised by ``Program.build`` when the program can't run in this
+    process (e.g. the sharded round without enough host devices)."""
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    program: str
+    message: str
+    severity: str = "error"          # "error" gates exit code; "warning"
+    detail: Optional[dict] = None
+
+    def to_json(self) -> dict:
+        d = dict(rule=self.rule, program=self.program, message=self.message,
+                 severity=self.severity)
+        if self.detail:
+            d["detail"] = self.detail
+        return d
+
+
+@dataclasses.dataclass
+class Built:
+    """One lowered-analyzable program instance."""
+    fn: Callable                      # jittable / jitted
+    args: tuple                       # concrete tiny arguments
+    meta: Dict = dataclasses.field(default_factory=dict)
+    overrides: Dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    name: str
+    description: str
+    build: Callable[[], Built]
+
+
+class Artifacts:
+    """Lazily derived views of one Built program, shared across rules so
+    each program traces/compiles at most once per run."""
+
+    def __init__(self, built: Built):
+        self.built = built
+        self._cache = dict(built.overrides)
+
+    def jaxpr(self):
+        if "jaxpr" not in self._cache:
+            import jax
+            self._cache["jaxpr"] = jax.make_jaxpr(self.built.fn)(
+                *self.built.args)
+        return self._cache["jaxpr"]
+
+    def compiled(self):
+        if "compiled" not in self._cache:
+            import jax
+            fn = self.built.fn
+            if not hasattr(fn, "lower"):
+                fn = jax.jit(fn)
+            self._cache["compiled"] = fn.lower(*self.built.args).compile()
+        return self._cache["compiled"]
+
+    def hlo(self) -> str:
+        if "hlo" not in self._cache:
+            self._cache["hlo"] = self.compiled().as_text()
+        return self._cache["hlo"]
+
+
+class Rule:
+    """One invariant. ``needs`` names the artifacts the rule consumes —
+    the runner only derives (and pays for) what's declared.  ``check``
+    returns findings; an empty list means the invariant holds."""
+
+    name: str = "rule"
+    description: str = ""
+    needs: Sequence[str] = ("jaxpr",)
+
+    def applicable(self, built: Built) -> bool:
+        return True
+
+    def check(self, program: str, built: Built,
+              artifacts: Artifacts) -> List[Finding]:
+        raise NotImplementedError
+
+    # -- helpers -----------------------------------------------------------
+    def allow(self, built: Built) -> tuple:
+        """Per-program allowlist for this rule: ``meta["allow"][rule]``."""
+        return tuple(built.meta.get("allow", {}).get(self.name, ()))
+
+    def finding(self, program: str, message: str, severity: str = "error",
+                **detail) -> Finding:
+        return Finding(self.name, program, message, severity,
+                       detail or None)
+
+
+def run_program(program: Program, rules: Sequence[Rule]) -> List[dict]:
+    """All requested rules over one program; one result row per rule."""
+    rows = []
+    try:
+        built = program.build()
+    except ProgramSkip as e:
+        return [dict(program=program.name, rule=r.name, ok=True,
+                     skipped=str(e), findings=[]) for r in rules]
+    artifacts = Artifacts(built)
+    for rule in rules:
+        row = dict(program=program.name, rule=rule.name)
+        if not rule.applicable(built):
+            row.update(ok=True, skipped="not applicable", findings=[])
+            rows.append(row)
+            continue
+        findings = rule.check(program.name, built, artifacts)
+        errors = [f for f in findings if f.severity == "error"]
+        row.update(ok=not errors,
+                   findings=[f.to_json() for f in findings])
+        rows.append(row)
+    return rows
+
+
+def run_analysis(programs: Sequence[Program],
+                 rules: Sequence[Rule]) -> dict:
+    import jax
+    results = []
+    for program in programs:
+        results.extend(run_program(program, rules))
+    violations = sum(1 for r in results for f in r["findings"]
+                     if f["severity"] == "error")
+    return dict(
+        schema_version=SCHEMA_VERSION,
+        jax_version=jax.__version__,
+        n_devices=jax.device_count(),
+        programs=[p.name for p in programs],
+        rules=[r.name for r in rules],
+        results=results,
+        violations=violations,
+        ok=violations == 0,
+    )
+
+
+def write_report(report: dict, path: str) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    return path

@@ -1,0 +1,190 @@
+"""Jaxpr walkers shared by the analysis rules (and, for back-compat, by
+``repro.utils.jaxpr``).
+
+Everything here is pure structure extraction over ``jax.make_jaxpr``
+output: recursion into every sub-jaxpr (scan/cond/while bodies, shard_map
+and pallas_call kernels), aval byte accounting, a liveness-based peak-byte
+estimate, and the generalized square-dims scan behind the no-[S, S]
+attention proof.  No rule policy lives here — rules.py turns these raw
+facts into findings.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Tuple
+
+import jax
+from jax.extend import core as jex_core
+
+_JAXPR_TYPES = (jex_core.Jaxpr, jex_core.ClosedJaxpr)
+
+
+def _as_jaxpr(jx):
+    """Unwrap ClosedJaxpr -> Jaxpr (identity on Jaxpr)."""
+    return jx.jaxpr if isinstance(jx, jex_core.ClosedJaxpr) else jx
+
+
+def subjaxprs(eqn) -> List:
+    """Every sub-jaxpr hanging off one equation's params (scan/while/cond
+    bodies, custom_jvp/vjp closures, shard_map bodies, pallas kernels)."""
+    subs = []
+    for p in eqn.params.values():
+        for sub in jax.tree_util.tree_leaves(
+                p, is_leaf=lambda x: isinstance(x, _JAXPR_TYPES)):
+            if isinstance(sub, _JAXPR_TYPES):
+                subs.append(_as_jaxpr(sub))
+    return subs
+
+
+def iter_eqns(jaxpr, depth: int = 0) -> Iterator[Tuple[object, int]]:
+    """Yield ``(eqn, depth)`` over a (Closed)Jaxpr and all sub-jaxprs."""
+    jx = _as_jaxpr(jaxpr)
+    for eqn in jx.eqns:
+        yield eqn, depth
+        for sub in subjaxprs(eqn):
+            yield from iter_eqns(sub, depth + 1)
+
+
+def aval_bytes(aval) -> int:
+    """Bytes of one abstract value (0 for abstract tokens / opaque avals).
+
+    PRNG-key avals report their base-array footprint via ``dtype.itemsize``
+    on new-style typed keys; avals without shape/dtype count as 0.
+    """
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for d in shape:
+        if not isinstance(d, int):   # symbolic/polymorphic dim
+            return 0
+        n *= d
+    try:
+        return n * dtype.itemsize
+    except AttributeError:
+        return 0
+
+
+def max_square_dims(jaxpr, S: int) -> int:
+    """Largest count of >= S dims on any intermediate aval, walking every
+    sub-jaxpr (scan/cond bodies, pallas_call kernels).
+
+    The no-[S, S]-intermediate proof for the blockwise attention routes
+    (tests/test_attn_backends.py, benchmarks/attn_bench.py): a forward
+    whose jaxpr never holds two >= S dims on one buffer cannot have
+    materialized the score matrix."""
+    worst = 0
+    for eqn, _ in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            shape = getattr(var.aval, "shape", ())
+            worst = max(worst, sum(1 for d in shape if isinstance(d, int)
+                                   and d >= S))
+    return worst
+
+
+def square_dim_findings(jaxpr, S: int, limit: int = 2,
+                        allow_primitives=()) -> List[dict]:
+    """Every intermediate holding >= ``limit`` dims of size >= ``S``:
+    the offending ``{primitive, shape, dtype, depth}`` records behind
+    ``max_square_dims`` (which only reports the worst count)."""
+    out = []
+    for eqn, depth in iter_eqns(jaxpr):
+        prim = eqn.primitive.name
+        if prim in allow_primitives:
+            continue
+        for var in eqn.outvars:
+            shape = getattr(var.aval, "shape", ())
+            big = sum(1 for d in shape if isinstance(d, int) and d >= S)
+            if big >= limit:
+                out.append(dict(primitive=prim, shape=list(shape),
+                                dtype=str(getattr(var.aval, "dtype", "?")),
+                                depth=depth))
+    return out
+
+
+def constvar_records(closed_jaxpr) -> List[dict]:
+    """The jaxpr's baked-in constants: ``{shape, dtype, bytes}`` per
+    constvar.  Large entries are closure captures that re-trace (and
+    re-ship) whenever the enclosing Python value changes — the
+    recompile-hazard rule's static signal."""
+    jx = closed_jaxpr
+    consts = getattr(jx, "consts", None)
+    cvars = _as_jaxpr(jx).constvars
+    out = []
+    for i, v in enumerate(cvars):
+        rec = dict(shape=list(getattr(v.aval, "shape", ())),
+                   dtype=str(getattr(v.aval, "dtype", "?")),
+                   bytes=aval_bytes(v.aval))
+        if consts is not None and i < len(consts):
+            rec["type"] = type(consts[i]).__name__
+        out.append(rec)
+    return out
+
+
+def pallas_block_records(jaxpr) -> List[dict]:
+    """Per ``pallas_call``: the kernel name and the summed byte footprint
+    of its block-shaped refs (the kernel jaxpr's invars — inputs, outputs
+    and scratch all appear there as ``MemRef`` avals).  That sum is the
+    VMEM working set one grid step holds resident."""
+    out = []
+    for eqn, depth in iter_eqns(jaxpr):
+        if eqn.primitive.name != "pallas_call":
+            continue
+        kernel = eqn.params.get("jaxpr")
+        if kernel is None:
+            continue
+        kjx = _as_jaxpr(kernel)
+        refs = [dict(shape=list(getattr(v.aval, "shape", ())),
+                     dtype=str(getattr(v.aval, "dtype", "?")),
+                     bytes=aval_bytes(v.aval))
+                for v in list(kjx.invars) + list(kjx.outvars)]
+        name = ""
+        nsi = eqn.params.get("name_and_src_info")
+        if nsi is not None:
+            name = getattr(nsi, "name", str(nsi))
+        out.append(dict(name=name, depth=depth,
+                        block_bytes=sum(r["bytes"] for r in refs),
+                        refs=refs))
+    return out
+
+
+def liveness_peak_bytes(jaxpr) -> int:
+    """Straight-line liveness estimate of peak live bytes for one jaxpr.
+
+    Walks equations in program order, allocating each eqn's outputs and
+    freeing every value at its last use; sub-jaxpr peaks (scan/cond
+    bodies) count as transient scratch of their enclosing equation.  This
+    is an *upper-bound shape* of XLA's actual allocation (no buffer
+    reuse/donation modeling) — useful as a regression gate on the order of
+    magnitude, not as an exact HBM number (that is
+    ``compiled.memory_analysis()``, cf. benchmarks/memory_footprint.py).
+    """
+    jx = _as_jaxpr(jaxpr)
+    eqns = jx.eqns
+    n = len(eqns)
+    last_use = {}
+    root = list(jx.invars) + list(jx.constvars)
+    for v in root:
+        last_use[v] = n            # inputs live throughout (conservative)
+    for i, eqn in enumerate(eqns):
+        for v in eqn.invars:
+            if not isinstance(v, jex_core.Literal):
+                last_use[v] = max(last_use.get(v, i), i)
+    for v in jx.outvars:
+        if not isinstance(v, jex_core.Literal):
+            last_use[v] = n
+    free_at = {}
+    for v, i in last_use.items():
+        free_at.setdefault(i, []).append(v)
+
+    live = sum(aval_bytes(v.aval) for v in root)
+    peak = live
+    for i, eqn in enumerate(eqns):
+        out_b = sum(aval_bytes(v.aval) for v in eqn.outvars)
+        inner = max((liveness_peak_bytes(sub) for sub in subjaxprs(eqn)),
+                    default=0)
+        peak = max(peak, live + out_b + inner)
+        live += out_b
+        for v in free_at.get(i, []):
+            live -= aval_bytes(v.aval)
+    return peak

@@ -1,22 +1,22 @@
 """Config registry: assigned architectures, paper models, input shapes."""
 from __future__ import annotations
 
-from repro.configs.base import (FLConfig, HW, InputShape, MeshConfig,
-                                ModelConfig, MoEConfig, SSMConfig, TrainConfig,
-                                XLSTMConfig, EncoderConfig)
+from repro.configs.base import (HW, EncoderConfig, FLConfig, InputShape,
+                                MeshConfig, ModelConfig, MoEConfig, SSMConfig,
+                                TrainConfig, XLSTMConfig)
 from repro.configs.shapes import SHAPES, get_shape
 
-from repro.configs.xlstm_350m import CONFIG as XLSTM_350M
-from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
-from repro.configs.qwen3_4b import CONFIG as QWEN3_4B
-from repro.configs.kimi_k2_1t_a32b import CONFIG as KIMI_K2
-from repro.configs.phi35_moe_42b_a6_6b import CONFIG as PHI35_MOE
-from repro.configs.qwen2_7b import CONFIG as QWEN2_7B
 from repro.configs.chatglm3_6b import CONFIG as CHATGLM3_6B
-from repro.configs.jamba_1_5_large_398b import CONFIG as JAMBA_1_5_LARGE
 from repro.configs.gemma2_27b import CONFIG as GEMMA2_27B
-from repro.configs.pixtral_12b import CONFIG as PIXTRAL_12B
+from repro.configs.jamba_1_5_large_398b import CONFIG as JAMBA_1_5_LARGE
+from repro.configs.kimi_k2_1t_a32b import CONFIG as KIMI_K2
 from repro.configs.paper_models import GEMMA2_2B, LLAMA32_1B, QWEN2_1_5B
+from repro.configs.phi35_moe_42b_a6_6b import CONFIG as PHI35_MOE
+from repro.configs.pixtral_12b import CONFIG as PIXTRAL_12B
+from repro.configs.qwen2_7b import CONFIG as QWEN2_7B
+from repro.configs.qwen3_4b import CONFIG as QWEN3_4B
+from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
+from repro.configs.xlstm_350m import CONFIG as XLSTM_350M
 
 ASSIGNED = {
     c.name: c

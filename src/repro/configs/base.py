@@ -8,8 +8,8 @@ family also provides a ``reduced()`` variant (<=2 layers, d_model<=512,
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)

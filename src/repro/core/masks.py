@@ -7,8 +7,7 @@ transferable across downstream tasks.
 """
 from __future__ import annotations
 
-import math
-from typing import Callable, Iterable, Optional, Sequence
+from typing import Callable, Iterable
 
 import jax
 import jax.numpy as jnp

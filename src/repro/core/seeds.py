@@ -4,7 +4,6 @@ perturbations from it — the basis of the virtual path)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def round_keys(root_seed: int, rnd: int, T: int):

@@ -13,9 +13,6 @@ All operations are jittable; index trees can be abstract for the dry-run.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, List, Sequence, Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,5 +1,5 @@
-from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset
+from repro.data.corpus import pretrain_batches
 from repro.data.partition import (dirichlet_partition, iid_partition,
                                   label_histogram, single_label_partition,
                                   subset)
-from repro.data.corpus import pretrain_batches
+from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset

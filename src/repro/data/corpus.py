@@ -4,8 +4,6 @@ Used (a) to select MEERKAT's sensitivity mask (avg squared gradient of the
 LM loss) and (b) as the server-held pre-training gradient in GradIP."""
 from __future__ import annotations
 
-from typing import Iterator
-
 import numpy as np
 
 from repro.data.synthetic import TaskSpec, _class_vocab

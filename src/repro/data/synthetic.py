@@ -10,7 +10,7 @@ controls — exactly the heterogeneity axis the paper studies.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -13,7 +13,6 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention as \
     flash_attention_kernel

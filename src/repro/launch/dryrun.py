@@ -30,22 +30,21 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ASSIGNED, get_config, get_shape
-from repro.configs.base import EncoderConfig, InputShape, MeshConfig, ModelConfig
+from repro.configs.base import InputShape, MeshConfig, ModelConfig
 from repro.core.fl_step import make_fl_train_step
 from repro.core.masks import abstract_mask
 from repro.core.spaces import MaskedSpace
-from repro.launch.hlo_tools import (COLLECTIVE_FACTOR,  # noqa: F401
-                                    COLLECTIVE_OPS, collective_bytes)
+from repro.launch.hlo_tools import (COLLECTIVE_OPS, collective_bytes,
+                                    cost_analysis)
 from repro.launch.mesh import make_mesh_from_config, mesh_config
 from repro.models import abstract_cache, abstract_params, decode_step, prefill
 from repro.models.init import active_param_count, param_count
 from repro.models.model import input_specs
 from repro.models.transformer import ShardCtx, lm_loss
 from repro.sharding.rules import (batch_specs, cache_specs, fsdp_only_specs,
-                                  mask_specs, param_specs, token_spec)
+                                  param_specs)
 
 P = jax.sharding.PartitionSpec
 
@@ -53,26 +52,12 @@ DTYPE = jnp.bfloat16
 FL_EPS = 1e-3
 FL_LR = 1e-4
 
-# collective-byte extraction lives in launch/hlo_tools.py (shared with
-# benchmarks/fl_scale_bench.py); re-exported under the historical name
-parse_collective_bytes = collective_bytes
-
 
 def _shallow_cfg(cfg: ModelConfig, n: int) -> ModelConfig:
     kw = dict(n_layers=cfg.period * n)
     if cfg.encoder is not None:
         kw["encoder"] = dataclasses.replace(cfg.encoder, n_layers=n)
     return cfg.replace(**kw)
-
-
-def _cost_analysis(compiled) -> dict:
-    """Normalize ``compiled.cost_analysis()`` across jax versions: older
-    releases return a per-device list of dicts, newer ones a single dict
-    (or None when the backend offers no analysis)."""
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else None
-    return ca or {}
 
 
 def _largest_block(S: int, target: int) -> int:
@@ -245,11 +230,10 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool,
                                   + ma.temp_size_in_bytes
                                   - ma.alias_size_in_bytes),
         }
-        ca = _cost_analysis(compiled)
+        ca = cost_analysis(compiled)
         rec["cost_full_scan"] = {"flops": float(ca.get("flops", 0.0)),
                                  "bytes": float(ca.get("bytes accessed", 0.0))}
-        rec["collectives_full_scan"] = parse_collective_bytes(
-            compiled.as_text())
+        rec["collectives_full_scan"] = collective_bytes(compiled.as_text())
 
         # ---- unrolled depth-1/2 compiles -> exact extrapolation -------------
         if fit:
@@ -259,11 +243,11 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool,
                 jfn, argsn = build_lowerable(cfg_n, shape, mesh, mc,
                                              step_kind, unroll_all=True)
                 cn = jfn.lower(*argsn).compile()
-                can = _cost_analysis(cn)
+                can = cost_analysis(cn)
                 pts[n] = {
                     "flops": float(can.get("flops", 0.0)),
                     "bytes": float(can.get("bytes accessed", 0.0)),
-                    "coll": parse_collective_bytes(cn.as_text()),
+                    "coll": collective_bytes(cn.as_text()),
                 }
             rec["fit_points"] = pts
             nper = cfg.n_periods

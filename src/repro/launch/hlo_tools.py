@@ -86,13 +86,21 @@ def op_totals(hlo_text: str, ops=OPS) -> dict:
     return dict(tot)
 
 
+def cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: older
+    releases return a per-device list of dicts, newer ones a single dict
+    (or None when the backend offers no analysis)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return ca or {}
+
+
 def main():
     # import here so --xla_force_host_platform_device_count is set first
     import os
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=512")
-    import dataclasses
-
     from repro.launch import dryrun as DR
 
     ap = argparse.ArgumentParser()

@@ -22,12 +22,10 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.configs.base import HW
-
-FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
-          "all-to-all": 1.0, "collective-permute": 1.0}
+from repro.launch.hlo_tools import COLLECTIVE_FACTOR
 
 SHAPE_TOKENS = {  # (global_batch, seq_len)
     "train_4k": (256, 4096),
@@ -60,7 +58,8 @@ def analyze(rec: dict) -> Optional[dict]:
     # collective away at depth 2 — clamp each term to >= 0
     t_comp = max(0.0, cost["flops"]) / HW["peak_flops_bf16"]
     t_mem = max(0.0, cost["bytes"]) / HW["hbm_bw"]
-    coll_bytes = sum(max(0.0, v) * FACTOR[k] for k, v in coll.items())
+    coll_bytes = sum(max(0.0, v) * COLLECTIVE_FACTOR[k]
+                     for k, v in coll.items())
     t_coll = coll_bytes / HW["ici_bw"]
     terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
     dominant = max(terms, key=terms.get)

@@ -64,7 +64,6 @@ import numpy as np  # noqa: E402
 from repro.configs import get_config
 from repro.configs.base import FLConfig
 from repro.configs.tiny import TINY
-from repro.models.transformer import DEFAULT_CTX
 from repro.core import (Client, DenseSpace, FederatedZO, LoRASpace,
                         magnitude_mask, pretrain_gradient_vec, random_mask,
                         sensitivity_mask)
@@ -73,6 +72,7 @@ from repro.data.partition import (dirichlet_partition, iid_partition,
                                   single_label_partition, subset)
 from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset
 from repro.models import Model
+from repro.models.transformer import DEFAULT_CTX
 
 
 def build_space(method, loss_fn, params, pre, density, seed):

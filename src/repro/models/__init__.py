@@ -1,5 +1,5 @@
-from repro.models.model import (Model, concrete_inputs, input_specs)
+from repro.models.decode import abstract_cache, decode_step, init_cache, prefill
 from repro.models.init import (abstract_params, active_param_count,
                                init_params, param_count)
+from repro.models.model import Model, concrete_inputs, input_specs
 from repro.models.transformer import DEFAULT_CTX, ShardCtx, forward, lm_loss
-from repro.models.decode import abstract_cache, decode_step, init_cache, prefill

@@ -15,8 +15,6 @@ freezes the state (and position) of inactive slots.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
 import jax.numpy as jnp
 
@@ -24,10 +22,9 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import ssm as SSM
 from repro.models import xlstm as XL
-from repro.models.ssm import _dt_rank
 from repro.models.transformer import (DEFAULT_CTX, ShardCtx, _ffn_fwd,
-                                      _maybe_posenc, _sinusoid, embed_input,
-                                      encoder_forward, forward, unembed)
+                                      _maybe_posenc, embed_input,
+                                      encoder_forward, unembed)
 
 P = jax.sharding.PartitionSpec
 

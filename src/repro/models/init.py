@@ -7,7 +7,6 @@ Layer parameters are *stacked over periods*: for each position ``i`` in
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

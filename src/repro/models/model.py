@@ -1,7 +1,7 @@
 """Public model facade + per-shape input specs (incl. frontend stubs)."""
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ Both return ``(y, aux_loss)`` where aux is the standard load-balance loss.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

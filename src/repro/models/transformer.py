@@ -3,8 +3,8 @@ every architecture family, scanning over stacked layer periods.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +15,6 @@ from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
 from repro.models import xlstm as XL
-from repro.models.ssm import _dt_rank
 
 P = jax.sharding.PartitionSpec
 

@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import XLSTMConfig
-from repro.models.layers import NEG_INF
 
 
 # ------------------------------------------------------------------ mLSTM --

@@ -1,3 +1,3 @@
-from repro.optim.optimizers import (adam, make_optimizer, sgd, zo_sgd,
-                                    OptState)
+from repro.optim.optimizers import (OptState, adam, make_optimizer, sgd,
+                                    zo_sgd)
 from repro.optim.schedule import constant, cosine, warmup_cosine

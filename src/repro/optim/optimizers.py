@@ -1,7 +1,7 @@
 """Minimal optimizer library (pytree-generic, jittable)."""
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,3 +1,3 @@
+from repro.sharding.fl import FLShardPlan, make_fl_plan
 from repro.sharding.rules import (batch_specs, cache_specs, fsdp_only_specs,
                                   mask_specs, param_specs, token_spec)
-from repro.sharding.fl import FLShardPlan, make_fl_plan

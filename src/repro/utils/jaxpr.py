@@ -1,34 +1,7 @@
-"""Jaxpr structural checks shared by tests and benchmarks."""
+"""Back-compat shim: the jaxpr structural checks moved into the static
+analyzer (``repro.analysis.walk``, DESIGN.md §10) so tests, benchmarks
+and the rule engine share one walker.  Import from ``repro.analysis``
+in new code."""
 from __future__ import annotations
 
-import jax
-
-
-def max_square_dims(jaxpr, S: int) -> int:
-    """Largest count of >= S dims on any intermediate aval, walking every
-    sub-jaxpr (scan/cond bodies, pallas_call kernels).
-
-    The no-[S, S]-intermediate proof for the blockwise attention routes
-    (tests/test_attn_backends.py, benchmarks/attn_bench.py): a forward
-    whose jaxpr never holds two >= S dims on one buffer cannot have
-    materialized the score matrix."""
-    worst = 0
-
-    def walk(jx):
-        nonlocal worst
-        for eqn in jx.eqns:
-            for var in eqn.outvars:
-                shape = getattr(var.aval, "shape", ())
-                worst = max(worst, sum(1 for d in shape if d >= S))
-            for p in eqn.params.values():
-                for sub in jax.tree_util.tree_leaves(
-                        p, is_leaf=lambda x: isinstance(
-                            x, (jax.extend.core.Jaxpr,
-                                jax.extend.core.ClosedJaxpr))):
-                    if isinstance(sub, jax.extend.core.ClosedJaxpr):
-                        walk(sub.jaxpr)
-                    elif isinstance(sub, jax.extend.core.Jaxpr):
-                        walk(sub)
-
-    walk(jaxpr.jaxpr)
-    return worst
+from repro.analysis.walk import max_square_dims  # noqa: F401

@@ -1,0 +1,143 @@
+"""The static analyzer (DESIGN.md §10): every rule flags its seeded
+known-bad fixture and passes its known-good twin, the registry covers the
+hot paths the perf story rests on, the report schema is stable, and the
+CLI's exit-code contract holds."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (ALL_RULES, FIXTURES, HOT_PATHS,
+                            check_no_dense_intermediates, liveness_peak_bytes,
+                            max_square_dims, run_analysis, run_program,
+                            write_report)
+from repro.analysis.core import SCHEMA_VERSION
+from repro.analysis.registry import programs_by_name
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _errors(rows):
+    return [f for r in rows for f in r["findings"]
+            if f["severity"] == "error"]
+
+
+# ------------------------------------------------------ fixture matrix ------
+@pytest.mark.parametrize("rule", ALL_RULES, ids=lambda r: r.name)
+def test_rule_flags_bad_fixture(rule):
+    fx = FIXTURES[rule.name]
+    assert fx["bad"], f"{rule.name} has no known-bad fixture"
+    for prog in fx["bad"]:
+        errs = _errors(run_program(prog, [rule]))
+        assert errs, f"{rule.name} missed its bad fixture {prog.name}"
+
+
+@pytest.mark.parametrize("rule", ALL_RULES, ids=lambda r: r.name)
+def test_rule_passes_good_fixture(rule):
+    fx = FIXTURES[rule.name]
+    assert fx["good"], f"{rule.name} has no known-good fixture"
+    for prog in fx["good"]:
+        errs = _errors(run_program(prog, [rule]))
+        assert not errs, (rule.name, prog.name, errs)
+
+
+# ------------------------------------------------------------ registry ------
+def test_registry_covers_hot_paths():
+    names = {p.name for p in HOT_PATHS}
+    assert {"zo_train_loop", "fl_round", "fl_round_sharded", "prefill",
+            "decode_burst", "first_order"} <= names
+    for p in HOT_PATHS:
+        assert p.description and callable(p.build)
+
+
+def test_registry_selection():
+    sel = programs_by_name(["prefill", "zo_train_loop"])
+    assert [p.name for p in sel] == ["prefill", "zo_train_loop"]
+    with pytest.raises(KeyError):
+        programs_by_name(["no_such_program"])
+
+
+def test_sharded_round_skips_without_devices():
+    # tests run single-device (conftest): the 2x2-mesh program must skip
+    # cleanly, not crash, and skipped rows count as ok
+    prog = programs_by_name(["fl_round_sharded"])[0]
+    if jax.device_count() >= 4:
+        pytest.skip("multi-device process; skip path not reachable")
+    rows = run_program(prog, list(ALL_RULES))
+    assert rows and all(r["ok"] and r.get("skipped") for r in rows)
+
+
+# ------------------------------------------------------- report schema ------
+def test_report_schema_and_write(tmp_path):
+    rule = next(r for r in ALL_RULES if r.name == "host-sync")
+    progs = FIXTURES["host-sync"]["bad"] + FIXTURES["host-sync"]["good"]
+    report = run_analysis(progs, [rule])
+    assert report["schema_version"] == SCHEMA_VERSION
+    for key in ("jax_version", "n_devices", "programs", "rules", "results",
+                "violations", "ok"):
+        assert key in report, key
+    assert report["violations"] > 0 and report["ok"] is False
+    for row in report["results"]:
+        assert {"program", "rule", "ok", "findings"} <= set(row)
+        for f in row["findings"]:
+            assert {"rule", "program", "message", "severity"} <= set(f)
+    path = write_report(report, str(tmp_path / "sub" / "ANALYSIS.json"))
+    assert json.load(open(path)) == json.loads(json.dumps(report))
+
+
+# ------------------------------------------------- standalone predicates ----
+def test_dense_predicate():
+    S = 64
+    bad = jax.make_jaxpr(lambda q, k: jnp.einsum("sd,td->st", q, k))(
+        jnp.ones((S, 8)), jnp.ones((S, 8)))
+    good = jax.make_jaxpr(lambda q, k: (q * k).sum(-1))(
+        jnp.ones((S, 8)), jnp.ones((S, 8)))
+    offenders = check_no_dense_intermediates(bad, S)
+    assert offenders and offenders[0]["shape"] == [S, S]
+    assert not check_no_dense_intermediates(good, S)
+    # back-compat surface (repro.utils re-export still works)
+    from repro.utils import max_square_dims as legacy
+    assert legacy is max_square_dims
+    assert max_square_dims(bad, S) >= 2 > max_square_dims(good, S)
+
+
+def test_liveness_peak_tracks_buffer_size():
+    def f(x):
+        return jnp.outer(x, x).sum()
+
+    small = liveness_peak_bytes(jax.make_jaxpr(f)(jnp.ones(128)))
+    big = liveness_peak_bytes(jax.make_jaxpr(f)(jnp.ones(1024)))
+    assert big >= 1024 * 1024 * 4        # the [1024, 1024] f32 outer product
+    assert big > small
+
+
+# ------------------------------------------------------------ CLI ----------
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+
+
+def test_cli_list_exit_zero():
+    r = _cli("--list")
+    assert r.returncode == 0, r.stderr
+    for name in ("zo_train_loop", "dense-materialization", "comm-budget"):
+        assert name in r.stdout
+
+
+def test_cli_fixture_mode_fires_nonzero():
+    r = _cli("--fixture", "host-sync")
+    assert r.returncode == 1, (r.stdout, r.stderr)
+    assert "violation" in r.stdout
+
+
+def test_cli_unknown_program_is_usage_error():
+    r = _cli("--programs", "no_such_program")
+    assert r.returncode == 2
+    assert "no_such_program" in r.stderr

@@ -1,6 +1,6 @@
 import pytest
 
-from repro.configs import ASSIGNED, REGISTRY, SHAPES, get_config, get_shape
+from repro.configs import ASSIGNED, SHAPES, get_config, get_shape
 
 EXPECTED = {
     "xlstm-350m": dict(n_layers=24, d_model=1024, n_heads=4, d_ff=0,
@@ -55,7 +55,7 @@ def test_reduced_limits(name):
 
 def test_param_counts_match_scale():
     """Sanity: configured sizes land near their nameplate parameter counts."""
-    from repro.models import param_count, active_param_count
+    from repro.models import active_param_count, param_count
     assert 0.9e12 < param_count(get_config("kimi-k2-1t-a32b")) < 1.15e12
     assert 25e9 < active_param_count(get_config("kimi-k2-1t-a32b")) < 40e9
     assert 330e9 < param_count(get_config("jamba-1.5-large-398b")) < 430e9

@@ -7,11 +7,10 @@ import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import (DenseSpace, MaskedSpace, make_local_run,
-                        projected_gradient, random_mask, reconstruct_delta,
-                        reconstruct_grad_vecs, round_keys)
+from repro.core import (DenseSpace, make_local_run, projected_gradient,
+                        random_mask, reconstruct_delta, reconstruct_grad_vecs,
+                        round_keys)
 from repro.core.zo import local_step
 
 hypothesis.settings.register_profile(

@@ -5,8 +5,8 @@ hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import numpy as np
 
-from repro.data import (TaskSpec, dirichlet_partition, iid_partition,
-                        label_histogram, pretrain_batches, sample_dataset,
+from repro.data import (TaskSpec, dirichlet_partition, label_histogram,
+                        pretrain_batches, sample_dataset,
                         single_label_partition, subset)
 
 

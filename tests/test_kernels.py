@@ -107,7 +107,6 @@ def test_flash_decode_matches_model_attention():
     want = gqa_attention(q4, k, v, valid, TINY)[:, 0]  # [B, H, hd]
     # kernel layout: [B, KVH, G, dh]; heads grouped kv-major (repeat semantics)
     qk = q4[:, 0].reshape(B, KV, G, hd)
-    kk = jnp.repeat(k, G, axis=2).reshape(B, S, KV, G, hd)[:, :, :, 0]
     out = ops.flash_decode(qk, k, v, L, block_s=64)
     np.testing.assert_allclose(np.asarray(out.reshape(B, KV * G, hd)),
                                np.asarray(want.reshape(B, KV * G, hd)),

@@ -1,7 +1,6 @@
 """Serving consistency: prefill + decode must reproduce the training forward
 exactly; the batched engine runs end to end."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -6,9 +6,9 @@ import pytest
 from repro.configs import ASSIGNED, get_config
 from repro.configs.base import MeshConfig
 from repro.configs.shapes import get_shape
-from repro.models.init import abstract_params
 from repro.models.decode import abstract_cache
-from repro.sharding.rules import (cache_specs, fsdp_only_specs, param_specs)
+from repro.models.init import abstract_params
+from repro.sharding.rules import cache_specs, fsdp_only_specs, param_specs
 
 P = jax.sharding.PartitionSpec
 MC = MeshConfig(data=16, model=16)

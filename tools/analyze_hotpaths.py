@@ -1,0 +1,17 @@
+"""Repo-root wrapper for the hot-path static analyzer — identical to
+
+    PYTHONPATH=src python -m repro.analysis [args]
+
+(see that CLI's --help; ``repro/analysis/__main__.py`` forces the host
+device count before jax loads, which is why this wrapper defers to it
+instead of importing the analysis package directly).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

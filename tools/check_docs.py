@@ -25,6 +25,7 @@ REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 CLIS = {
     "repro.launch.train": "src/repro/launch/train.py",
     "repro.launch.serve": "src/repro/launch/serve.py",
+    "repro.analysis": "src/repro/analysis/cli.py",
 }
 
 
