@@ -12,7 +12,13 @@ S in {256, 1024, 2048}:
 
 Every row also checks three-way output parity and, for the blockwise
 routes, the structural guarantee that no [S, S]-shaped intermediate exists
-in the jaxpr (the checker that also runs in tests/test_attn_backends.py).
+in the jaxpr (the checker that also runs in tests/test_attn_backends.py),
+and carries achieved-GFLOP/s + MFU columns per backend computed against the
+``launch/roofline.py`` analytic FLOPs model and per-platform peak (both
+fail loudly when the model does not cover an arch or platform).
+``--autotune`` ensures ``kernels.autotune`` table entries for each
+(arch, S) key before timing, so the pallas rows launch with measured-best
+blocks and "auto" resolvers pick the measured-fastest route.
 
 Writes runs/bench/BENCH_attn.json.  CPU wall times validate the *structure*
 (the pallas rows run the kernel in interpret mode); the [S, S]-free jaxpr
@@ -59,8 +65,20 @@ def _tree_max_err(a, b):
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
-def bench_row(cfg, S: int, seed: int, reps: int) -> dict:
+def bench_row(cfg, S: int, seed: int, reps: int,
+              autotune: bool = False) -> dict:
     B = 2
+    if autotune:
+        # measure-or-reuse the (block_q, block_k) winner for this key
+        # before timing: the pallas rows then launch with tuned blocks,
+        # and "auto" resolvers pick the measured-fastest route
+        from repro.kernels import autotune as AT
+        hd, G = cfg.resolved_head_dim, cfg.n_heads // cfg.n_kv_heads
+        entry, measured = AT.ensure("fwd", S, hd, G,
+                                    kv_heads=cfg.n_kv_heads, reps=reps)
+        print(f"  autotune fwd S={S} hd={hd} G={G}: {entry['route']} "
+              f"bq={entry['block_q']} bk={entry['block_k']} "
+              f"[{'measured' if measured else 'cached'}]")
     models = {be: Model(cfg, ctx=ShardCtx(attn_backend=be))
               for be in BACKENDS}
     params = models["dense"].init(jax.random.key(seed))
@@ -114,6 +132,21 @@ def bench_row(cfg, S: int, seed: int, reps: int) -> dict:
     parity_ok = (all(e < 1e-2 for e in pf_err.values())
                  and all(e < tol for e in zo_err.values())
                  and all(no_ss.values()))
+
+    # ---- achieved FLOP/s + MFU against the roofline FLOPs model ----
+    # (C.roofline_flops / C.mfu raise rather than emit null when the
+    # model or the platform peak is missing for this arch)
+    from repro.kernels.autotune import platform_key
+    from repro.launch.roofline import host_peak_flops
+    peak = host_peak_flops()
+    flops = {"prefill": C.roofline_flops(cfg, step="prefill", B=B, S=S),
+             "zo_step": C.roofline_flops(cfg, step="zo_step", B=B, S=S)}
+    ms = {"prefill": pf_ms, "zo_step": zo_ms}
+    gflops = {path: {be: round(flops[path] / ms[path][be] / 1e9, 3)
+                     for be in BACKENDS} for path in flops}
+    mfu = {path: {be: round(C.mfu(flops[path], ms[path][be], peak), 6)
+                  for be in BACKENDS} for path in flops}
+
     row = dict(
         arch=cfg.name, S=S,
         prefill_ms={be: round(pf_ms[be] * 1e3, 2) for be in BACKENDS},
@@ -122,6 +155,8 @@ def bench_row(cfg, S: int, seed: int, reps: int) -> dict:
         prefill_speedup_pallas=round(pf_ms["dense"] / pf_ms["pallas"], 3),
         zo_step_speedup_online=round(zo_ms["dense"] / zo_ms["online"], 3),
         zo_step_speedup_pallas=round(zo_ms["dense"] / zo_ms["pallas"], 3),
+        model_flops=flops, achieved_gflops=gflops, mfu=mfu,
+        peak_flops=peak, platform=platform_key(),
         prefill_max_err=pf_err, zo_g_max_err=zo_err,
         no_ss_intermediate=no_ss, parity_ok=bool(parity_ok))
     print(f"  {cfg.name:24s} S={S:5d} "
@@ -135,13 +170,16 @@ def bench_row(cfg, S: int, seed: int, reps: int) -> dict:
     return row
 
 
-def run(smoke: bool = False, seed: int = 0, reps: int = 3) -> dict:
+def run(smoke: bool = False, seed: int = 0, reps: int = 3,
+        autotune: bool = False) -> dict:
     archs = [TINY] if smoke else [TINY, get_config("qwen3-4b").reduced()]
     lengths = (256,) if smoke else (256, 1024, 2048)
-    rows = [bench_row(cfg, S, seed, reps) for cfg in archs for S in lengths]
+    rows = [bench_row(cfg, S, seed, reps, autotune=autotune)
+            for cfg in archs for S in lengths]
     return {
         "table": "attn", "rows": rows,
         "backends": list(BACKENDS),
+        "autotuned": bool(autotune),
         "all_parity_ok": all(r["parity_ok"] for r in rows),
         "all_no_ss": all(all(r["no_ss_intermediate"].values())
                          for r in rows),
@@ -150,7 +188,10 @@ def run(smoke: bool = False, seed: int = 0, reps: int = 3) -> dict:
                  "fl_step.make_fl_train_step (2 forwards at S). CPU wall "
                  "times run the pallas rows in interpret mode and validate "
                  "structure + parity; the [S,S]-free jaxpr property is the "
-                 "hardware-transferable claim (DESIGN.md §perf).",
+                 "hardware-transferable claim (DESIGN.md §perf). mfu = "
+                 "roofline model FLOPs / wall / HOST_PEAK_FLOPS[platform] "
+                 "(launch/roofline.py): comparable across rows, nominal in "
+                 "absolute terms while the platform is 'interpret'.",
         "all_ok": all(r["parity_ok"] for r in rows)}
 
 
@@ -160,8 +201,11 @@ def main():
                     help="tiny arch, S=256 only (CI)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--autotune", action="store_true",
+                    help="ensure kernels.autotune table entries for each "
+                         "(arch, S) before timing (cached keys reused)")
     a = ap.parse_args()
-    res = run(smoke=a.smoke, seed=a.seed, reps=a.reps)
+    res = run(smoke=a.smoke, seed=a.seed, reps=a.reps, autotune=a.autotune)
     # smoke saves under its own name so CI / local smoke runs never
     # clobber the committed full-matrix artifact
     print("saved:", C.save_result(

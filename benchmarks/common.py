@@ -139,6 +139,40 @@ def gp_vector(problem: Problem, space) -> jnp.ndarray:
                                  problem.pretrain)
 
 
+def roofline_flops(cfg, *, step: str, B: int, S: int) -> float:
+    """Analytic model FLOPs for one benchmark step via
+    ``launch/roofline.py`` (active-param matmuls + the quadratic
+    attention term, layer-pattern aware).
+
+    Fails loudly — RuntimeError — when the roofline model cannot produce
+    a positive finite FLOP count for this (arch, step), instead of letting
+    a benchmark row silently emit null MFU."""
+    import math
+
+    from repro.launch import roofline as R
+    try:
+        f = R.step_model_flops(cfg, B, S, step)
+    except Exception as e:
+        raise RuntimeError(
+            f"roofline model FLOPs unavailable for arch {cfg.name!r} "
+            f"step {step!r} (B={B}, S={S}): {e}") from e
+    if not math.isfinite(f) or f <= 0:
+        raise RuntimeError(
+            f"roofline model FLOPs for arch {cfg.name!r} step {step!r} "
+            f"came out {f!r}; the FLOPs model does not cover this arch")
+    return f
+
+
+def mfu(flops: float, seconds: float, peak: float | None = None) -> float:
+    """Achieved-FLOP/s fraction of the platform peak.  ``peak`` defaults
+    to ``roofline.host_peak_flops()`` — which raises for platforms missing
+    from ``HOST_PEAK_FLOPS`` rather than returning null."""
+    from repro.launch import roofline as R
+    if peak is None:
+        peak = R.host_peak_flops()
+    return flops / max(seconds, 1e-12) / peak
+
+
 def save_result(name: str, result: dict) -> str:
     os.makedirs(RUNS_DIR, exist_ok=True)
     path = os.path.join(RUNS_DIR, f"{name}.json")

@@ -186,6 +186,38 @@ def _memory_bad_vmem() -> Built:
     return Built(fn, (jnp.ones((2048, 2048)),), meta=dict(runtime=False))
 
 
+def _memory_bad_residual_stack() -> Built:
+    """The pre-recompute-VJP first_order pattern: differentiating a scan
+    over query blocks stacks every block's [blk, S] softmax residuals for
+    the backward — O(S^2) live bytes (the measured 186 MB peak at model
+    shapes).  The budget is recompute-sized (O(S*dh), what the flash
+    kernel's VJP keeps), so the stacked residuals must trip the gate."""
+    import jax
+    import jax.numpy as jnp
+
+    S, blk, dh = 1024, 128, 16
+
+    def attn_loss(q, k):
+        qb = q.reshape(S // blk, blk, dh)
+
+        def one(_, qi):
+            s = qi @ k.T                       # [blk, S] scores
+            p = jax.nn.softmax(s, axis=-1)     # residual the scan stacks
+            return _, (p @ k).sum()
+
+        _, outs = jax.lax.scan(one, None, qb)
+        return outs.sum()
+
+    def fn(q, k):
+        return jax.grad(attn_loss)(q, k)
+
+    q = jnp.ones((S, dh))
+    # recompute-sized ceiling: O(S*dh) residuals are ~64 KiB here; the
+    # stacked [S/blk, blk, S] score residuals are ~4 MiB
+    return Built(fn, (q, q), meta=dict(peak_bytes_budget=2 * 2 ** 20,
+                                       runtime=False))
+
+
 def _memory_good() -> Built:
     import jax
     import jax.numpy as jnp
@@ -235,7 +267,10 @@ FIXTURES: Dict[str, Dict[str, List[Program]]] = {
         bad=[Program("fixture:memory:bad-peak", "64 MiB dense outer",
                      _memory_bad_peak),
              Program("fixture:memory:bad-vmem",
-                     "32 MiB pallas block working set", _memory_bad_vmem)],
+                     "32 MiB pallas block working set", _memory_bad_vmem),
+             Program("fixture:memory:bad-residual-stack",
+                     "scan-stacked attention backward residuals vs a "
+                     "recompute-sized budget", _memory_bad_residual_stack)],
         good=[Program("fixture:memory:good", "small blocks, small peak",
                       _memory_good)]),
 }

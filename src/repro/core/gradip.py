@@ -109,7 +109,7 @@ def pretrain_gradient_vec(loss_fn, params, space, batches):
     acc = jnp.zeros((space.n,), jnp.float32)
     n = 0
     for b in batches:
-        with differentiable_attn():  # no VJP on the pallas attn route
+        with differentiable_attn():  # grad-appropriate attn route
             acc = acc + space.slice(grad_fn(params, b))
         n += 1
     return acc / max(n, 1)

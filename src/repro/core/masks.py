@@ -27,7 +27,7 @@ def sensitivity_scores(loss_fn: Callable, params, batches: Iterable):
     acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     n = 0
     for batch in batches:
-        with differentiable_attn():  # no VJP on the pallas attn route
+        with differentiable_attn():  # grad-appropriate attn route
             g = grad_fn(params, batch)
         acc = jax.tree.map(lambda a, gg: a + jnp.square(gg.astype(jnp.float32)),
                            acc, g)

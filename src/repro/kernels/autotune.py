@@ -1,0 +1,316 @@
+"""Measured block-size autotuner for the flash-attention kernels.
+
+``BENCH_attn.json`` showed the Pallas forward *trailing* the online-softmax
+jnp route at every sequence length on this host with the fixed (128, 128)
+block heuristic.  Rather than guess, this module measures: for a given
+(op, S, head_dim, G) problem it times the Pallas kernel over a candidate
+(block_q, block_k) grid *and* the online jnp route, persists the winner to
+an on-disk JSON table, and serves lookups to
+
+* ``ops.flash_attention`` — which blocks to launch with when the caller
+  does not pin them, and
+* ``models.layers.resolve_attn_backend`` — whether ``"auto"`` should route
+  to pallas at all for that key (``fastest_route``), including falling back
+  to online where pallas genuinely loses.
+
+Table location: ``$REPRO_AUTOTUNE_DIR`` or ``<repo>/runs/autotune/``, file
+``attn_table.json``.  Keys are ``{op}|{platform}|S{S}|hd{head_dim}|G{G}``
+with ``op`` in {fwd, grad} and ``platform`` either ``interpret`` (off-TPU
+— the kernels run in interpret mode, measurements do not transfer to
+hardware) or the accelerator's device kind, so a table tuned on one host
+never misroutes another.  Entry schema (DESIGN.md §perf)::
+
+    {"route": "pallas" | "online",      # measured-fastest route
+     "block_q": 128, "block_k": 128,    # best pallas blocks
+     "best_pallas_ms": 1.9, "online_ms": 2.4,
+     "pallas_ms": {"64x64": 2.5, ...},  # full candidate timings
+     "reps": 3, "batch": 1, "kv_heads": 1}
+
+Cached entries are authoritative: ``ensure`` never re-measures an existing
+key unless ``force=True``, so two runs over the same shapes produce
+identical picks (the CI determinism gate, ``--require-cached``).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.kernels.autotune \
+        --s-list 256,1024,2048 --head-dim 16 --g 4 --ops fwd,grad
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+import types
+from typing import Dict, Optional, Tuple
+
+TABLE_NAME = "attn_table.json"
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                          "..", "..", ".."))
+DEFAULT_TABLE_DIR = os.path.join(_REPO_ROOT, "runs", "autotune")
+OPS = ("fwd", "grad")
+# candidate (block_q, block_k) launch grids; clamped to the padded S and
+# deduped per problem before timing
+CANDIDATES = ((64, 64), (64, 128), (128, 64), (128, 128),
+              (128, 256), (256, 128), (256, 256))
+
+
+def platform_key() -> str:
+    """Measurement-validity domain for table keys: ``interpret`` off-TPU
+    (kernels run in the Pallas interpreter), else the device kind."""
+    import jax
+
+    from repro.kernels.ops import _default_interpret
+    if _default_interpret():
+        return "interpret"
+    return jax.devices()[0].device_kind.replace(" ", "_").lower()
+
+
+def table_dir(dirname: Optional[str] = None) -> str:
+    return (dirname or os.environ.get("REPRO_AUTOTUNE_DIR")
+            or DEFAULT_TABLE_DIR)
+
+
+def table_path(dirname: Optional[str] = None) -> str:
+    return os.path.join(table_dir(dirname), TABLE_NAME)
+
+
+_CACHE: Dict[str, dict] = {}
+
+
+def clear_cache() -> None:
+    """Drop the in-process table cache (tests / after external writes)."""
+    _CACHE.clear()
+
+
+def load_table(dirname: Optional[str] = None) -> dict:
+    path = table_path(dirname)
+    if path not in _CACHE:
+        tab = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    tab = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                tab = {}
+        _CACHE[path] = tab
+    return _CACHE[path]
+
+
+def _save(tab: dict, dirname: Optional[str]) -> str:
+    os.makedirs(table_dir(dirname), exist_ok=True)
+    path = table_path(dirname)
+    with open(path, "w") as f:
+        json.dump(tab, f, indent=1, sort_keys=True)
+    _CACHE[path] = tab
+    return path
+
+
+def key_for(op: str, S: int, head_dim: int, G: int,
+            platform: Optional[str] = None) -> str:
+    assert op in OPS, op
+    return f"{op}|{platform or platform_key()}|S{S}|hd{head_dim}|G{G}"
+
+
+def lookup(op: str, S: int, head_dim: int, G: int,
+           dirname: Optional[str] = None) -> Optional[dict]:
+    return load_table(dirname).get(key_for(op, S, head_dim, G))
+
+
+def best_blocks(S: int, head_dim: int, G: int, op: str = "fwd",
+                dirname: Optional[str] = None) -> Optional[Tuple[int, int]]:
+    """Measured-best (block_q, block_k) for the key, or None if untuned.
+
+    Falls back to the other op's entry — block preferences transfer far
+    better across fwd/grad than across (S, head_dim) keys."""
+    for o in (op,) + tuple(x for x in OPS if x != op):
+        e = lookup(o, S, head_dim, G, dirname)
+        if e and "block_q" in e:
+            return int(e["block_q"]), int(e["block_k"])
+    return None
+
+
+def fastest_route(S: int, head_dim: int, G: int, op: str = "fwd",
+                  dirname: Optional[str] = None) -> Optional[str]:
+    """Measured-fastest route ('pallas' | 'online') for the exact key, or
+    None when the key was never tuned on this platform."""
+    e = lookup(op, S, head_dim, G, dirname)
+    return e.get("route") if e else None
+
+
+# ----------------------------------------------------------- measuring ----
+def _time_best(fn, args, reps: int) -> float:
+    import jax
+    jax.block_until_ready(fn(*args))  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3  # ms
+
+
+def measure(op: str, S: int, head_dim: int, G: int, *, kv_heads: int = 1,
+            batch: int = 1, reps: int = 3, candidates=None,
+            seed: int = 0) -> dict:
+    """Time pallas over the candidate grid and the online route; return a
+    table entry (does not persist — see :func:`ensure`)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops as K
+    from repro.models import layers as L
+
+    assert op in OPS, op
+    cfg = types.SimpleNamespace(attn_softcap=0.0)
+    B, KV, H = batch, kv_heads, kv_heads * G
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, H, head_dim)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, head_dim)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, head_dim)), jnp.float32)
+
+    def pallas_fwd(bq, bk):
+        return jax.jit(functools.partial(K.flash_attention,
+                                         block_q=bq, block_k=bk))
+
+    def online_fwd(q, k, v):
+        return L.online_gqa_attention(q, k, v, cfg)
+
+    if op == "fwd":
+        routes = {"online": jax.jit(online_fwd)}
+
+        def cand_fn(bq, bk):
+            return pallas_fwd(bq, bk)
+    else:
+        def grad_of(route):
+            return jax.jit(jax.grad(
+                lambda q, k, v: route(q, k, v).astype(jnp.float32).sum(),
+                argnums=(0, 1, 2)))
+        routes = {"online": grad_of(online_fwd)}
+
+        def cand_fn(bq, bk):
+            return grad_of(lambda q, k, v: K.flash_attention(
+                q, k, v, block_q=bq, block_k=bk))
+
+    cands, seen = [], set()
+    for bq, bk in (candidates or CANDIDATES):
+        bq, bk = min(bq, S), min(bk, S)
+        # a candidate whose score block [block_q*G, block_k] reaches
+        # [S, S] is a degenerate single-tile launch — it reintroduces
+        # the dense-sized buffer the blockwise routes are proven free of
+        # (the no-[S,S] jaxpr walk), so it is never eligible to win
+        if bq * G >= S and bk >= S:
+            continue
+        if (bq, bk) not in seen:
+            seen.add((bq, bk))
+            cands.append((bq, bk))
+    if not cands:
+        # every candidate degenerate at this S (small S, large G):
+        # halve block_k on the smallest candidate to keep the KV axis
+        # tiled and the invariant intact
+        bq, bk = min((candidates or CANDIDATES))
+        cands = [(min(bq, S), max(8, min(bk, S) // 2))]
+
+    pallas_ms = {f"{bq}x{bk}": _time_best(cand_fn(bq, bk), (q, k, v), reps)
+                 for bq, bk in cands}
+    online_ms = _time_best(routes["online"], (q, k, v), reps)
+    best_key = min(pallas_ms, key=pallas_ms.get)
+    bq, bk = (int(x) for x in best_key.split("x"))
+    best = pallas_ms[best_key]
+    return dict(route="pallas" if best < online_ms else "online",
+                block_q=bq, block_k=bk,
+                best_pallas_ms=round(best, 4),
+                online_ms=round(online_ms, 4),
+                pallas_ms={k: round(v, 4) for k, v in pallas_ms.items()},
+                reps=reps, batch=batch, kv_heads=kv_heads)
+
+
+def ensure(op: str, S: int, head_dim: int, G: int, *, kv_heads: int = 1,
+           batch: int = 1, reps: int = 3, candidates=None, force: bool = False,
+           dirname: Optional[str] = None) -> Tuple[dict, bool]:
+    """Return (entry, measured): the cached entry if present (measured =
+    False — cached picks are authoritative and deterministic), else
+    measure, persist, and return it (measured = True)."""
+    key = key_for(op, S, head_dim, G)
+    tab = load_table(dirname)
+    if key in tab and not force:
+        return tab[key], False
+    entry = measure(op, S, head_dim, G, kv_heads=kv_heads, batch=batch,
+                    reps=reps, candidates=candidates)
+    tab = dict(tab)
+    tab[key] = entry
+    _save(tab, dirname)
+    return entry, True
+
+
+# ------------------------------------------------------------------ CLI ----
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Tune flash-attention (block_q, block_k) per "
+                    "(op, S, head_dim, G) and persist winners to "
+                    "runs/autotune/attn_table.json")
+    ap.add_argument("--s-list", default="256,1024,2048",
+                    help="comma-separated sequence lengths to tune")
+    ap.add_argument("--head-dim", type=int, default=16,
+                    help="attention head dim (TINY default)")
+    ap.add_argument("--g", type=int, default=4,
+                    help="query heads per KV head (GQA group size)")
+    ap.add_argument("--kv-heads", type=int, default=1,
+                    help="KV heads in the measurement problem")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="batch rows in the measurement problem")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="best-of-N timing repetitions")
+    ap.add_argument("--ops", default="fwd,grad",
+                    help="which ops to tune: fwd, grad or both")
+    ap.add_argument("--table-dir", default=None,
+                    help="table directory (default: $REPRO_AUTOTUNE_DIR "
+                         "or runs/autotune)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shape: S=256 only, reps=1, 2 candidates")
+    ap.add_argument("--force", action="store_true",
+                    help="re-measure keys already in the table")
+    ap.add_argument("--require-cached", action="store_true",
+                    help="exit 1 if any key had to be measured (CI "
+                         "determinism gate: a second run must be all-cached)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the current table and exit")
+    a = ap.parse_args(argv)
+
+    if a.list:
+        tab = load_table(a.table_dir)
+        print(json.dumps(tab, indent=1, sort_keys=True))
+        print(f"{len(tab)} entries at {table_path(a.table_dir)}")
+        return 0
+
+    s_list = [int(s) for s in a.s_list.split(",") if s]
+    cands = None
+    reps = a.reps
+    if a.smoke:
+        s_list, reps, cands = [256], 1, ((64, 64), (128, 128))
+    ops = [o.strip() for o in a.ops.split(",") if o.strip()]
+    measured_any = False
+    for op in ops:
+        for S in s_list:
+            entry, measured = ensure(
+                op, S, a.head_dim, a.g, kv_heads=a.kv_heads, batch=a.batch,
+                reps=reps, candidates=cands, force=a.force,
+                dirname=a.table_dir)
+            measured_any |= measured
+            tag = "measured" if measured else "cached"
+            print(f"  {key_for(op, S, a.head_dim, a.g):40s} -> "
+                  f"{entry['route']:6s} bq={entry['block_q']} "
+                  f"bk={entry['block_k']} "
+                  f"(pallas {entry['best_pallas_ms']:.2f}ms vs online "
+                  f"{entry['online_ms']:.2f}ms) [{tag}]")
+    print(f"table: {table_path(a.table_dir)}")
+    if a.require_cached and measured_any:
+        print("FAIL: --require-cached but keys were (re)measured")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

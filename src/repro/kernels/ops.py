@@ -117,13 +117,21 @@ def flash_decode(q, k, v, length, *, block_s: int = 512, softcap: float = 0.0,
                                              "interpret"))
 def flash_attention(q, k, v, lengths=None, *, window: int = 0,
                     softcap: float = 0.0, causal: bool = True,
-                    block_q: int = 128, block_k: int = 128,
+                    block_q: int | None = None, block_k: int | None = None,
                     interpret: bool | None = None):
-    """GQA flash-attention forward; see flash_attention.py for the kernel.
+    """GQA flash-attention (differentiable); see flash_attention.py for the
+    kernels — ``jax.grad`` through this wrapper runs the recompute-based
+    backward Pallas kernels.
 
     Model layout in, model layout out: q [B, S, H, hd]; k, v [B, S, KV, hd]
     -> [B, S, H, hd] (H = KV * G, head h in group h // G — the same order
     ``jnp.repeat(k, G, axis=2)`` produces in the dense route).
+
+    ``block_q``/``block_k`` default to the measured winner in the
+    ``kernels.autotune`` table for this (S, head_dim, G) on this platform
+    (falling back to 128x128 when untuned); pass them explicitly to pin a
+    launch grid.  The lookup happens at trace time, so the choice is baked
+    into the jitted computation.
 
     ``lengths`` ([B] int32 or None) masks right-padded keys.  Sequence
     lengths that are not a block multiple are zero-padded up to one: padded
@@ -133,6 +141,11 @@ def flash_attention(q, k, v, lengths=None, *, window: int = 0,
     B, S, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
+    if block_q is None or block_k is None:
+        from repro.kernels import autotune
+        tuned = autotune.best_blocks(S, hd, G, op="fwd")
+        block_q = block_q or (tuned[0] if tuned else 128)
+        block_k = block_k or (tuned[1] if tuned else 128)
     # small sequences: one sublane-tiled block per axis (mirrors flash_decode)
     s8 = -(-S // SUB) * SUB
     bq = min(block_q, s8)

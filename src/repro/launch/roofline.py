@@ -34,6 +34,82 @@ SHAPE_TOKENS = {  # (global_batch, seq_len)
     "long_500k": (1, 1),
 }
 
+# Peak FLOP/s per measurement platform, for *measured*-MFU accounting
+# (benchmarks/attn_bench.py divides achieved FLOP/s by this).  Keys match
+# ``kernels.autotune.platform_key()``: the accelerator device kind, or
+# "interpret" off-TPU (Pallas interpreter; the nominal host-f32 peak makes
+# interpret-mode MFU comparable across rows, not meaningful in absolute
+# terms — DESIGN.md §6).  Unknown platforms raise via
+# :func:`host_peak_flops` rather than silently producing null MFU.
+HOST_PEAK_FLOPS = {
+    "tpu_v5_lite": HW["peak_flops_bf16"],   # v5e, per chip
+    "tpu_v4": 275e12,
+    "cpu": 1e11,        # nominal single-socket f32 host peak
+    "interpret": 1e11,  # same host peak; kernels run interpreted
+}
+
+
+def host_peak_flops(platform: Optional[str] = None) -> float:
+    """Peak FLOP/s for the measurement platform (default: this host's
+    ``kernels.autotune.platform_key()``).  Raises KeyError for platforms
+    missing from ``HOST_PEAK_FLOPS`` — MFU must never silently be null."""
+    if platform is None:
+        from repro.kernels.autotune import platform_key
+        platform = platform_key()
+    if platform not in HOST_PEAK_FLOPS:
+        raise KeyError(
+            f"no peak-FLOP/s entry for platform {platform!r}: add it to "
+            f"launch/roofline.py HOST_PEAK_FLOPS "
+            f"(have {sorted(HOST_PEAK_FLOPS)})")
+    return HOST_PEAK_FLOPS[platform]
+
+
+def attention_flops(cfg, B: int, S: int, causal: bool = True) -> float:
+    """Matmul FLOPs of the attention score + value contractions for one
+    full-model forward: 4 * pairs * head_dim per (batch, head), with
+    ``pairs`` the live (query, key) count — S(S+1)/2 causal, banded to the
+    sliding window on 'local_attn' layers, per the layer pattern."""
+    hd = cfg.resolved_head_dim
+    H = cfg.n_heads
+
+    def pairs(window: int) -> float:
+        if not causal:
+            return float(S) * S
+        full = S * (S + 1) / 2
+        if window and window < S:
+            # banded: query t sees min(t+1, w) keys; the sum telescopes to
+            # full minus the (S-w)-row tail triangle
+            return full - (S - window) * (S - window + 1) / 2
+        return full
+
+    total = 0.0
+    for mixer, _ in cfg.layer_pattern:
+        if mixer == "attn":
+            total += pairs(0)
+        elif mixer == "local_attn":
+            total += pairs(cfg.sliding_window)
+    return 4.0 * B * H * hd * total * cfg.n_periods
+
+
+def forward_model_flops(cfg, B: int, S: int) -> float:
+    """Analytic FLOPs for one forward: 2 * N_active per token (matmul
+    MACs x2, MoE-aware) plus the quadratic attention term."""
+    from repro.models.init import active_param_count
+    return 2.0 * active_param_count(cfg) * B * S + attention_flops(cfg, B, S)
+
+
+def step_model_flops(cfg, B: int, S: int, step: str) -> float:
+    """Forward-equivalents per benchmark step: prefill = 1 forward,
+    zo_step = 2 (the MEERKAT dual forward, Eq. 1, n_dirs=1), first_order =
+    3 (forward + ~2x backward).  Unknown steps raise."""
+    fwd = forward_model_flops(cfg, B, S)
+    mult = {"prefill": 1.0, "forward": 1.0, "zo_step": 2.0,
+            "first_order": 3.0}
+    if step not in mult:
+        raise KeyError(f"no FLOPs model for step {step!r} "
+                       f"(have {sorted(mult)})")
+    return mult[step] * fwd
+
 
 def model_flops_per_device(rec: dict) -> float:
     """Analytic 'useful' FLOPs per device for the lowered step."""

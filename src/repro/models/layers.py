@@ -9,7 +9,8 @@ Forward attention (training / prefill) runs through one dispatch point,
 routes per ``ShardCtx.attn_backend`` (see :func:`resolve_attn_backend`):
 
 * ``"pallas"`` — the blockwise online-softmax Pallas kernel
-  (``kernels/flash_attention.py``), GQA-grouped, no [S, S] scores;
+  (``kernels/flash_attention.py``), GQA-grouped, no [S, S] scores,
+  differentiable via its recompute-based backward kernels;
 * ``"online"`` — the pure-jnp online-softmax route (differentiable, carries
   no [S, S] scores either; the ``zo_dp`` sharded-training route);
 * ``"dense"``  — materialized scores (q-block-chunked when ``attn_q_block``
@@ -161,18 +162,28 @@ ATTN_BACKENDS = ("auto", "pallas", "online", "dense")
 # avoid the O(S^2) materialization that dominates forward memory
 ATTN_AUTO_MIN_S = 256
 
+# without an autotune measurement, compiled hosts only *assume* the pallas
+# kernel beats the online jnp route at large S: BENCH_attn-style probes
+# showed the fixed-block kernel trailing online at moderate S (0.79x at
+# S=256), so untuned "auto" stays on online below this
+ATTN_PALLAS_MIN_S = 1024
+
 _DIFFERENTIABLE_ATTN = contextvars.ContextVar("differentiable_attn",
                                               default=False)
 
 
 @contextlib.contextmanager
 def differentiable_attn():
-    """Scope forcing :func:`resolve_attn_backend` onto the differentiable
-    jnp routes ("online"/"dense").  The Pallas forward kernel defines no
-    VJP, so ``jax.grad`` callers (train/first_order, sensitivity-mask
-    calibration, GradIP pre-training gradients) enter this scope around
-    their grad traces — the resolve happens at trace time, so the choice is
-    baked into the jitted computation."""
+    """Scope marking a ``jax.grad`` trace for :func:`resolve_attn_backend`
+    (train/first_order, sensitivity-mask calibration, GradIP pre-training
+    gradients enter it around their grad traces).  Every route is
+    differentiable — the Pallas kernel carries a recompute-based backward
+    (``kernels/flash_attention.py``) — so the scope no longer *forces* a
+    jnp route; it selects the grad-appropriate one: under "auto" the
+    kernel VJP is preferred at blockwise S because its O(S*dh) residuals
+    bound backward memory where the jnp VJPs stack O(S^2)-class score
+    residuals (DESIGN.md §10).  The resolve happens at trace time, so the
+    choice is baked into the jitted computation."""
     tok = _DIFFERENTIABLE_ATTN.set(True)
     try:
         yield
@@ -185,26 +196,33 @@ def resolve_attn_backend(backend, cfg, ctx=None, *, S: int = 0,
     """Map a requested forward-attention backend to 'pallas' | 'online' |
     'dense'.
 
-    Mirrors :func:`resolve_decode_backend` for the training/prefill
-    forward: "auto" prefers the Pallas flash-attention kernel once ``S``
-    is large enough that the [S, S] score materialization matters, and
-    falls back to the jnp routes for layouts the kernel does not cover —
-    a sharded mesh (the dense route carries the GSPMD sharding
-    constraints; "online" is the sharded large-S choice), a grad trace
-    (no kernel VJP — see :func:`differentiable_attn`), a head_dim off the
-    128-lane tile, or an off-TPU host, where the kernel only runs in
-    interpret mode: unlike the per-token flash-decode kernel, interpreting
-    the full-S forward is the *slowest* route by a wide margin
-    (BENCH_attn.json), so "auto" means the fastest blockwise route for
-    the host — "online" interpreted, "pallas" compiled."""
+    Explicit backends are honored as requested (the Pallas kernel now
+    defines a VJP, so "pallas" is valid inside grad traces too).  "auto"
+    resolves, in order:
+
+    * the legacy ``ctx.online_attn`` flag -> "online";
+    * a sharded mesh -> the jnp routes (the kernel carries no GSPMD
+      sharding constraints): "dense" small-S, "online" blockwise;
+    * S below ``ATTN_AUTO_MIN_S`` -> "dense" (the [S, S] tile is
+      cache-resident and one fused matmul wins);
+    * the measured ``kernels.autotune`` table, exact (op, S, head_dim, G,
+      platform) key — op is "grad" inside :func:`differentiable_attn`
+      scopes, "fwd" otherwise — so a populated table always picks the
+      measured-fastest route, including online where pallas loses;
+    * untuned grad traces -> "pallas": the recompute VJP bounds backward
+      memory to O(S*dh) residuals (the jnp VJPs stack O(S^2)-class score
+      residuals — the 186 MB first_order liveness peak, DESIGN.md §10);
+    * untuned forwards -> "online" when interpreting (off-TPU the kernel
+      runs in the Pallas interpreter, the slowest route by far) or for
+      head dims off the 128-lane tile; compiled, "pallas" only from
+      ``ATTN_PALLAS_MIN_S`` up — fixed-block probes showed online winning
+      at moderate S, so unmeasured hosts don't assume the kernel wins."""
     backend = backend or "auto"
     if backend not in ATTN_BACKENDS:
         raise ValueError(
             f"attn backend must be one of {ATTN_BACKENDS}, got {backend!r}")
     if differentiable is None:
         differentiable = _DIFFERENTIABLE_ATTN.get()
-    if differentiable and backend in ("auto", "pallas"):
-        return "online" if (not S or S >= ATTN_AUTO_MIN_S) else "dense"
     if backend != "auto":
         return backend
     if ctx is not None and getattr(ctx, "online_attn", False):
@@ -214,9 +232,20 @@ def resolve_attn_backend(backend, cfg, ctx=None, *, S: int = 0,
     if S and S < ATTN_AUTO_MIN_S:
         return "dense"
     from repro.kernels.ops import _default_interpret
+    if S:
+        from repro.kernels import autotune
+        route = autotune.fastest_route(
+            S, cfg.resolved_head_dim, cfg.n_heads // cfg.n_kv_heads,
+            op="grad" if differentiable else "fwd")
+        if route is not None:
+            return route
+    if differentiable:
+        if not _default_interpret() and cfg.resolved_head_dim % 128:
+            return "online"  # kernel tiling does not cover this head_dim
+        return "pallas"
     if _default_interpret() or cfg.resolved_head_dim % 128:
         return "online"
-    return "pallas"
+    return "pallas" if S >= ATTN_PALLAS_MIN_S else "online"
 
 
 def forward_attention(q, k, v, cfg, ctx=None, *, window: int = 0,

@@ -41,9 +41,10 @@ class ShardCtx:
     # off-TPU), "ref" the grouped jnp path (the only sharded-mesh choice)
     decode_backend: str = "auto"  # auto | pallas | ref
     # forward-attention route for training / prefill
-    # (layers.resolve_attn_backend): "auto" runs the Pallas flash-attention
-    # kernel at large S, the blockwise jnp online-softmax or dense scores
-    # otherwise; grad traces always resolve to a differentiable jnp route
+    # (layers.resolve_attn_backend): "auto" consults the measured
+    # kernels.autotune table, else heuristics — dense small-S, the
+    # blockwise jnp online-softmax or the Pallas kernel at larger S; grad
+    # traces prefer the kernel's recompute VJP (bounded backward memory)
     attn_backend: str = "auto"  # auto | pallas | online | dense
 
     @property

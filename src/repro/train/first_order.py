@@ -16,9 +16,12 @@ def make_train_step(loss_fn: Callable, optimizer: str = "sgd",
                     lr: float = 1e-3, **kw):
     """Returns (init_state, jittable step(params, opt_state, batch)).
 
-    Grad traces run under :func:`differentiable_attn`: the flash-attention
-    forward kernel has no VJP, so ``attn_backend`` resolves to the
-    differentiable "online"/"dense" routes here."""
+    Grad traces run under :func:`differentiable_attn`: at blockwise S the
+    "auto" backend resolves to the Pallas kernel's recompute-based VJP
+    (``kernels/flash_attention.py``), whose O(S*dh) saved residuals bound
+    the backward's attention memory — the analyzer's first_order
+    memory-ceiling budget is sized against that recompute peak
+    (``analysis/registry.py``)."""
     init, update = make_optimizer(optimizer, lr, **kw)
 
     def step(params, opt_state, batch):

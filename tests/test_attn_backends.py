@@ -23,6 +23,18 @@ from repro.models.transformer import ShardCtx
 BACKENDS = ("dense", "online", "pallas")
 
 
+@pytest.fixture(autouse=True)
+def _isolated_autotune(monkeypatch, tmp_path):
+    """Resolver tests assert the *untuned* policy: point the autotune
+    table at an empty dir so a committed runs/autotune table (or one
+    written by other tests) can't redirect "auto"."""
+    from repro.kernels import autotune
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path / "at"))
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
 def _qkv(seed, B, S, H, KV, hd):
     k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
     return (jax.random.normal(k1, (B, S, H, hd)),
@@ -211,16 +223,21 @@ def test_resolve_attn_backend(monkeypatch):
     assert L.resolve_attn_backend("dense", TINY) == "dense"
     # auto: dense below the threshold; above it the fastest blockwise
     # route for the host — online while interpreting (this CPU container),
-    # the kernel once compiled on TPU
+    # and without a measured autotune entry even compiled hosts only
+    # assume the kernel wins from ATTN_PALLAS_MIN_S up (fixed-block
+    # probes showed online ahead at moderate S)
     assert L.resolve_attn_backend("auto", TINY, S=small) == "dense"
     assert L.resolve_attn_backend("auto", TINY, S=big) == "online"
     assert L.resolve_attn_backend(None, TINY, S=big) == "online"
     monkeypatch.setattr("repro.kernels.ops._default_interpret",
                         lambda: False)
+    cfg128 = TINY.replace(head_dim=128)
+    assert L.resolve_attn_backend("auto", cfg128, S=big) == "online"
     assert L.resolve_attn_backend(
-        "auto", TINY.replace(head_dim=128), S=big) == "pallas"
+        "auto", cfg128, S=L.ATTN_PALLAS_MIN_S) == "pallas"
     # compiled, but head_dim off the 128-lane tile: jnp route
-    assert L.resolve_attn_backend("auto", TINY, S=big) == "online"
+    assert L.resolve_attn_backend(
+        "auto", TINY, S=L.ATTN_PALLAS_MIN_S) == "online"
     with pytest.raises(ValueError):
         L.resolve_attn_backend("cuda", TINY)
 
@@ -237,17 +254,20 @@ def test_resolve_attn_backend_mesh_and_legacy():
 
 
 def test_grad_scope_resolves_differentiable():
+    # grad traces prefer the kernel's recompute VJP at blockwise S
+    # (bounded backward memory); explicit backends are honored as asked
     with L.differentiable_attn():
-        assert L.resolve_attn_backend("auto", TINY, S=1024) == "online"
-        assert L.resolve_attn_backend("pallas", TINY, S=64) == "dense"
+        assert L.resolve_attn_backend("auto", TINY, S=1024) == "pallas"
+        assert L.resolve_attn_backend("auto", TINY, S=64) == "dense"
+        assert L.resolve_attn_backend("pallas", TINY, S=64) == "pallas"
         assert L.resolve_attn_backend("dense", TINY, S=1024) == "dense"
+        assert L.resolve_attn_backend("online", TINY, S=1024) == "online"
     assert L.resolve_attn_backend("auto", TINY, S=1024) == "online"
 
 
 def test_first_order_grad_through_auto_backend():
-    """jax.grad through the model loss works even when the ctx asks for the
-    (non-differentiable) pallas route: first_order's differentiable_attn
-    scope reroutes the trace."""
+    """jax.grad through the model loss works when the ctx asks for the
+    pallas route: the kernel's recompute VJP carries the backward."""
     from repro.models import Model
     from repro.train.first_order import make_train_step
     model = Model(TINY, ctx=ShardCtx(attn_backend="pallas"))

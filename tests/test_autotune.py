@@ -1,0 +1,154 @@
+"""kernels/autotune: table I/O, cached-pick determinism, resolver and
+ops wiring, and the CLI's --require-cached determinism gate."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.tiny import TINY
+from repro.kernels import autotune as AT
+from repro.models import layers as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _table_dir(monkeypatch, tmp_path):
+    d = str(tmp_path / "autotune")
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", d)
+    AT.clear_cache()
+    yield d
+    AT.clear_cache()
+
+
+def _stub_measure(monkeypatch, route="pallas", bq=64, bk=32):
+    calls = []
+
+    def fake(op, S, head_dim, G, **kw):
+        calls.append((op, S, head_dim, G))
+        return dict(route=route, block_q=bq, block_k=bk,
+                    best_pallas_ms=1.0, online_ms=2.0,
+                    pallas_ms={f"{bq}x{bk}": 1.0}, reps=1, batch=1,
+                    kv_heads=1)
+
+    monkeypatch.setattr(AT, "measure", fake)
+    return calls
+
+
+def test_ensure_writes_then_reuses(monkeypatch, _table_dir):
+    calls = _stub_measure(monkeypatch)
+    e1, measured1 = AT.ensure("fwd", 256, 16, 2)
+    assert measured1 and calls == [("fwd", 256, 16, 2)]
+    # cached entry is authoritative: no re-measure, identical pick
+    e2, measured2 = AT.ensure("fwd", 256, 16, 2)
+    assert not measured2 and e2 == e1 and len(calls) == 1
+    # a fresh process (cache cleared) rereads the same pick from disk
+    AT.clear_cache()
+    e3, measured3 = AT.ensure("fwd", 256, 16, 2)
+    assert not measured3 and e3 == e1 and len(calls) == 1
+    # the on-disk table holds the platform-scoped key
+    tab = json.load(open(AT.table_path()))
+    assert AT.key_for("fwd", 256, 16, 2) in tab
+    # force re-measures
+    _, measured4 = AT.ensure("fwd", 256, 16, 2, force=True)
+    assert measured4 and len(calls) == 2
+
+
+def test_lookup_helpers(monkeypatch):
+    _stub_measure(monkeypatch, route="online", bq=128, bk=64)
+    AT.ensure("fwd", 1024, 16, 2)
+    assert AT.fastest_route(1024, 16, 2, op="fwd") == "online"
+    assert AT.fastest_route(1024, 16, 2, op="grad") is None  # exact-op key
+    assert AT.fastest_route(999, 16, 2, op="fwd") is None
+    # best_blocks serves the tuned blocks, falling back across ops
+    assert AT.best_blocks(1024, 16, 2, op="fwd") == (128, 64)
+    assert AT.best_blocks(1024, 16, 2, op="grad") == (128, 64)
+    assert AT.best_blocks(999, 16, 2) is None
+
+
+def test_resolver_consults_table(monkeypatch):
+    """'auto' must pick the measured-fastest route for a tuned key — in
+    both directions, and separately per op (fwd vs grad traces)."""
+    hd, G = TINY.resolved_head_dim, TINY.n_heads // TINY.n_kv_heads
+    S = 1024
+    # untuned on this (interpreting) host: online fwd, pallas grad
+    assert L.resolve_attn_backend("auto", TINY, S=S) == "online"
+    assert L.resolve_attn_backend("auto", TINY, S=S,
+                                  differentiable=True) == "pallas"
+    # tuned: fwd says pallas wins, grad says online wins — auto follows
+    _stub_measure(monkeypatch, route="pallas")
+    AT.ensure("fwd", S, hd, G)
+    _stub_measure(monkeypatch, route="online")
+    AT.ensure("grad", S, hd, G)
+    assert L.resolve_attn_backend("auto", TINY, S=S) == "pallas"
+    assert L.resolve_attn_backend("auto", TINY, S=S,
+                                  differentiable=True) == "online"
+    # other keys stay on the heuristic
+    assert L.resolve_attn_backend("auto", TINY, S=2048) == "online"
+
+
+def test_ops_flash_attention_uses_tuned_blocks(monkeypatch):
+    """ops.flash_attention launches with the table's blocks when the
+    caller doesn't pin them — same numerics, tuned launch grid."""
+    S, H, KV, hd = 192, 2, 1, 24   # unique shape: fresh trace guaranteed
+    from repro.kernels import ops as K
+    seen = []
+    real = AT.best_blocks
+
+    def spy(S_, hd_, G_, op="fwd", dirname=None):
+        seen.append((S_, hd_, G_, op))
+        return (96, 96)
+
+    monkeypatch.setattr(AT, "best_blocks", spy)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, S, KV, hd)), jnp.float32)
+    out = K.flash_attention(q, k, v)
+    assert (S, hd, H // KV, "fwd") in seen
+    monkeypatch.setattr(AT, "best_blocks", real)
+    ref = K.flash_attention(q, k, v, block_q=96, block_k=96)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_measure_real_smoke():
+    """One real (tiny) measurement: fields present, a sane winner."""
+    e = AT.measure("fwd", 64, 8, 2, reps=1, candidates=((16, 16), (32, 32)))
+    assert e["route"] in ("pallas", "online")
+    assert set(e["pallas_ms"]) == {"16x16", "32x32"}
+    assert e["best_pallas_ms"] > 0 and e["online_ms"] > 0
+    assert (e["block_q"], e["block_k"]) in ((16, 16), (32, 32))
+
+
+def test_measure_excludes_degenerate_single_tile():
+    """A candidate whose score block reaches [S, S] (block_q*G >= S and
+    block_k >= S) must never win: it would reintroduce the dense-sized
+    buffer the no-[S,S] jaxpr walk proves absent.  With every candidate
+    degenerate, measure falls back to a KV-tiled shrink."""
+    e = AT.measure("fwd", 64, 8, 2, reps=1,
+                   candidates=((32, 32), (64, 64)))
+    assert "64x64" not in e["pallas_ms"]          # filtered out
+    assert set(e["pallas_ms"]) == {"32x32"}
+    e2 = AT.measure("fwd", 64, 8, 2, reps=1, candidates=((64, 64),))
+    assert set(e2["pallas_ms"]) == {"64x32"}      # fallback: block_k halved
+
+
+def test_cli_require_cached_gate(monkeypatch, _table_dir, capsys):
+    """Two CLI runs over the same keys: the first measures and persists,
+    the second is all-cached — the CI determinism gate."""
+    _stub_measure(monkeypatch)
+    args = ["--s-list", "64", "--head-dim", "8", "--g", "2",
+            "--reps", "1", "--ops", "fwd"]
+    assert AT.main(args) == 0
+    # a second run must reuse every pick: --require-cached passes
+    assert AT.main(args + ["--require-cached"]) == 0
+    out = capsys.readouterr().out
+    assert "[cached]" in out
+    # --force re-measures, so the gate fails
+    assert AT.main(args + ["--require-cached", "--force"]) == 1
+    # --list prints the table
+    assert AT.main(["--list"]) == 0
+    assert "fwd|" in capsys.readouterr().out

@@ -26,6 +26,7 @@ CLIS = {
     "repro.launch.train": "src/repro/launch/train.py",
     "repro.launch.serve": "src/repro/launch/serve.py",
     "repro.analysis": "src/repro/analysis/cli.py",
+    "repro.kernels.autotune": "src/repro/kernels/autotune.py",
 }
 
 
