@@ -1,0 +1,152 @@
+"""Fault-tolerance benchmark: convergence under client dropout, and the
+cost of crash recovery (ISSUE 9 tentpole; writes
+``runs/bench/BENCH_fault.json`` / ``BENCH_fault_smoke.json``).
+
+Two tables:
+
+* **degradation** — one training run per drop rate on the same problem
+  (deterministic ``repro.fault.FaultPlan`` schedules): final acc/loss,
+  cumulative FL protocol bytes (``CommLog`` counts only traffic that
+  actually happened — offline clients cost nothing), and the mean
+  fraction of the fleet that reported per round.  This is the
+  FedAvg-over-survivors story: accuracy should degrade gracefully, not
+  cliff, as the reporting fraction falls.
+* **recovery** — measured overhead of the checkpoint protocol on the
+  same server: snapshot wall time, restore wall time, checkpoint size,
+  a round's wall time for scale, and the ``resume_bitexact`` gate (a
+  restored fresh server runs the next round bit-identically to the
+  donor — the invariant ``tools/kill_recover.py`` drills end-to-end
+  across processes and mesh shapes).
+
+Gates: ``claim_resume_bitexact`` (hard bit-equality) and
+``claim_comm_tracks_reporting`` (upload bytes strictly fall as the drop
+rate rises — dropped uploads must not be billed).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.fault_bench           # full grid
+  PYTHONPATH=src python -m benchmarks.fault_bench --smoke   # CI subset
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.fault import FaultPlan
+
+FULL_DROP_RATES = (0.0, 0.1, 0.2, 0.4)
+SMOKE_DROP_RATES = (0.0, 0.25)
+
+
+def _flat(tree) -> np.ndarray:
+    return np.concatenate([np.asarray(leaf).ravel()
+                           for leaf in jax.tree.leaves(tree)])
+
+
+def run_degradation(prob, *, method: str, rounds: int, drop_rates,
+                    late_rate: float, n_clients: int, seed: int):
+    rows = []
+    for dr in drop_rates:
+        srv = C.make_server(prob, method, T=1, n_clients=n_clients,
+                            seed=seed, rounds=rounds)
+        fp = FaultPlan(n_clients, rounds, drop_rate=dr, late_rate=late_rate,
+                       seed=seed)
+        reported = []
+        t0 = time.time()
+        for _ in range(rounds):
+            srv.run_round(faults=fp.round_faults(srv.round))
+            reported.append(srv.last_round_info["n_reporting"])
+        dt = time.time() - t0
+        m = C.final_metrics(srv, prob)
+        rows.append(dict(
+            drop_rate=dr, late_rate=late_rate, rounds=rounds,
+            acc=m["acc"], loss=m["loss"],
+            up_bytes=srv.comm.up_bytes, down_bytes=srv.comm.down_bytes,
+            mean_reporting_frac=round(float(np.mean(reported)) / n_clients,
+                                      4),
+            pending_at_end=len(srv._pending), wall_s=round(dt, 1)))
+        print(f"  drop={dr:.2f} acc={m['acc']:.3f} loss={m['loss']:.3f} "
+              f"report_frac={rows[-1]['mean_reporting_frac']:.2f} "
+              f"up={srv.comm.up_bytes}B ({dt:.0f}s)")
+    return rows
+
+
+def run_recovery(prob, *, method: str, warm_rounds: int, n_clients: int,
+                 seed: int):
+    """Measure save/restore wall time + size against a round's cost, and
+    gate bit-exact resume: donor and restored-fresh server must produce
+    identical params after one more round."""
+    srv = C.make_server(prob, method, T=1, n_clients=n_clients, seed=seed)
+    for _ in range(warm_rounds):
+        srv.run_round()
+    (_, round_s) = C.timed(srv.run_round)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.msgpack")
+        (_, save_s) = C.timed(srv.save_checkpoint, path)
+        ckpt_bytes = os.path.getsize(path)
+        twin = C.make_server(prob, method, T=1, n_clients=n_clients,
+                             seed=seed)
+        (_, restore_s) = C.timed(twin.load_checkpoint, path)
+    srv.run_round()
+    twin.run_round()
+    bitexact = bool(np.array_equal(_flat(srv.params), _flat(twin.params))
+                    and srv.comm.up_bytes == twin.comm.up_bytes
+                    and [c.ptr for c in srv.clients]
+                    == [c.ptr for c in twin.clients])
+    row = dict(round_s=round(round_s, 4), save_s=round(save_s, 4),
+               restore_s=round(restore_s, 4), ckpt_bytes=ckpt_bytes,
+               overhead_frac=round(save_s / max(round_s, 1e-9), 4),
+               resume_bitexact=bitexact)
+    print(f"  recovery: save={save_s:.3f}s restore={restore_s:.3f}s "
+          f"round={round_s:.3f}s ckpt={ckpt_bytes}B bitexact={bitexact}")
+    return row
+
+
+def run(quick: bool = True, seed: int = 0, method: str = "random",
+        rounds: int | None = None, late_rate: float = 0.1,
+        n_clients: int = 8) -> dict:
+    rounds = rounds or (12 if quick else 150)
+    drop_rates = SMOKE_DROP_RATES if quick else FULL_DROP_RATES
+    prob = C.build_problem(seed=seed)
+    deg = run_degradation(prob, method=method, rounds=rounds,
+                          drop_rates=drop_rates, late_rate=late_rate,
+                          n_clients=n_clients, seed=seed)
+    rec = run_recovery(prob, method=method, warm_rounds=2,
+                       n_clients=n_clients, seed=seed)
+    up = [r["up_bytes"] for r in deg]
+    return {
+        "table": "fault_tolerance", "rows": deg, "recovery": rec,
+        "claim_resume_bitexact": rec["resume_bitexact"],
+        "claim_comm_tracks_reporting": bool(
+            all(a > b for a, b in zip(up, up[1:]))),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset; writes BENCH_fault_smoke.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--method", default="random",
+                    choices=["meerkat", "magnitude", "random", "full",
+                             "lora"],
+                    help="coordinate space (fault handling is "
+                         "method-agnostic; random builds fastest)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="override the per-cell round budget")
+    ap.add_argument("--late-rate", type=float, default=0.1,
+                    help="straggler probability alongside each drop rate")
+    a = ap.parse_args()
+    res = run(quick=a.smoke, seed=a.seed, method=a.method, rounds=a.rounds,
+              late_rate=a.late_rate)
+    name = "BENCH_fault_smoke" if a.smoke else "BENCH_fault"
+    print("saved:", C.save_result(name, res))
+
+
+if __name__ == "__main__":
+    main()

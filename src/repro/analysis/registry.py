@@ -175,6 +175,58 @@ def build_fl_round_sharded() -> Built:
                 commlog_up_bytes=int(srv.comm.up_bytes))))
 
 
+def build_ckpt_roundtrip() -> Built:
+    """The fault-tolerance save/restore round trip
+    (``checkpoint/state.py``): a live ``FederatedZO`` server runs a
+    round, snapshots, and restores into a fresh twin; the analyzed
+    program is the round group *as driven by restored parameters*, so
+    the rule sweep (dtype drift, host syncs, dense materialization,
+    liveness) covers the resume path the kill-recover drill exercises.
+    Restore fidelity is asserted here at build time — a checkpoint that
+    loses bits must fail the sweep, not just the e2e drill."""
+    import os
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import FLConfig
+    from repro.core import Client, FederatedZO
+    from repro.data.partition import dirichlet_partition, subset
+    from repro.data.synthetic import TaskSpec, sample_dataset
+    model, params, loss, space = _round_problem()
+    K, T, b = 4, 2, 8
+    fl = FLConfig(n_clients=K, local_steps=T, lr=5e-2, eps=1e-3, seed=0,
+                  zo_backend="ref")
+    train = sample_dataset(TaskSpec(), 256, seed=1)
+    parts = dirichlet_partition(train["label"], K, 0.5, seed=0)
+
+    def mk():
+        clients = [Client(k, subset(train, p), b)
+                   for k, p in enumerate(parts)]
+        return FederatedZO(loss, params, space, fl, clients)
+
+    srv = mk()
+    srv.run_round()
+    twin = mk()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.msgpack")
+        srv.save_checkpoint(path)
+        twin.load_checkpoint(path)
+    for a, c in zip(jax.tree.leaves(srv.params), jax.tree.leaves(twin.params)):
+        if not np.array_equal(np.asarray(a), np.asarray(c)):
+            raise AssertionError("checkpoint round trip lost parameter bits")
+
+    group = _group_fn(loss, space, T=T)
+    keys = jax.random.split(jax.random.key(2), T)
+    batches = {"tokens": _tokens(K, T, b, 16),
+               "label": _tokens(K, T, b) % 4}
+    return Built(
+        jax.jit(group), (twin.params, keys, batches),
+        meta=dict(dyn_dims={"K": K},
+                  peak_bytes_budget=8 * MiB))     # same body as fl_round
+
+
 def build_prefill() -> Built:
     """``models/decode.prefill`` — the serving admission path: right-
     padded B=2 prompt batch with per-row lengths at S=320."""
@@ -246,6 +298,9 @@ HOT_PATHS = (
     Program("fl_round_sharded",
             "FederatedZO round group under FLShardPlan.shard_group (2x2)",
             build_fl_round_sharded),
+    Program("ckpt_roundtrip",
+            "checkpoint save/restore round trip driving the round group",
+            build_ckpt_roundtrip),
     Program("prefill",
             "models/decode.prefill: right-padded serving admission",
             build_prefill),

@@ -1,1 +1,8 @@
-from repro.checkpoint.io import load_pytree, save_pytree
+from repro.checkpoint.io import (FORMAT_VERSION, CheckpointError,
+                                 load_manifest, load_pytree, save_pytree)
+from repro.checkpoint.state import (STATE_VERSION, restore_server_state,
+                                    save_server_state)
+
+__all__ = ["CheckpointError", "FORMAT_VERSION", "STATE_VERSION",
+           "load_manifest", "load_pytree", "save_pytree",
+           "restore_server_state", "save_server_state"]

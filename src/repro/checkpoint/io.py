@@ -1,57 +1,136 @@
-"""Msgpack pytree checkpointing with a shape/dtype manifest.
+"""Msgpack pytree checkpointing with a versioned, checksummed manifest.
+
+One file per checkpoint: ``{version, meta, leaves: {keystr(path):
+{dtype, shape, crc32, data}}}``, written atomically (``.tmp`` + fsync +
+rename) so a crash mid-write never leaves a half-checkpoint under the
+final name.  Every leaf carries a CRC32 of its raw bytes; loading
+verifies the format version and every checksum and raises
+:class:`CheckpointError` — never a raw msgpack/numpy error — on
+truncated, corrupt, or version-mismatched files.
 
 Arrays are gathered to host (fine for the simulation scale; a sharded
-implementation would write per-shard files keyed by device index — layout
-documented in DESIGN.md)."""
+implementation would write per-shard files keyed by device index —
+layout documented in DESIGN.md §5).  Restoring a checkpoint saved under
+one mesh shape onto another therefore needs no resharding pass: the
+manifest holds global host arrays and the caller re-places them
+(``FLShardPlan.place_params``; see ``checkpoint/state.py``).
+"""
 from __future__ import annotations
 
 import os
-from typing import Any
+import zlib
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+FORMAT_VERSION = 2
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file is unreadable, truncated, corrupt, from a
+    different format version, or inconsistent with the restore target."""
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Name -> dtype, covering the ml_dtypes extended types (bfloat16,
+    float8_*) whose names plain numpy does not recognize."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
 
 def _pack_leaf(x):
-    a = np.asarray(x)
-    return {b"dtype": a.dtype.str, b"shape": list(a.shape),
-            b"data": a.tobytes()}
+    a = np.asarray(jax.device_get(x))
+    data = a.tobytes()
+    # dtype by *name* ('float32', 'bfloat16'): the .str code of an
+    # ml_dtypes extended type is an unportable void descriptor
+    return {"dtype": a.dtype.name, "shape": list(a.shape),
+            "crc32": zlib.crc32(data), "data": data}
 
 
-def _unpack_leaf(d):
-    a = np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"]))
-    return jnp.asarray(a.reshape(d[b"shape"]))
+def _unpack_leaf(name: str, d):
+    try:
+        dtype, shape = d["dtype"], d["shape"]
+        crc, data = d["crc32"], d["data"]
+    except (KeyError, TypeError) as e:
+        raise CheckpointError(
+            f"leaf {name!r}: malformed manifest entry ({e})") from e
+    if zlib.crc32(data) != crc:
+        raise CheckpointError(
+            f"leaf {name!r}: CRC32 mismatch (corrupt leaf bytes)")
+    try:
+        # copy out of the read-only frombuffer view: the returned array
+        # owns writable memory and outlives the msgpack payload
+        a = np.frombuffer(data, dtype=_resolve_dtype(dtype)) \
+            .reshape(shape).copy()
+    except (ValueError, TypeError, AttributeError) as e:
+        raise CheckpointError(f"leaf {name!r}: {e}") from e
+    return a
 
 
 def save_pytree(path: str, tree: Any, metadata: dict | None = None):
+    """Atomically write ``tree`` (+ msgpack-able ``metadata``) to ``path``."""
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     payload = {
-        b"meta": metadata or {},
-        b"leaves": {jax.tree_util.keystr(p): _pack_leaf(l) for p, l in flat},
+        "version": FORMAT_VERSION,
+        "meta": metadata or {},
+        "leaves": {jax.tree_util.keystr(p): _pack_leaf(l) for p, l in flat},
     }
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+
+
+def load_manifest(path: str) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Read + verify a checkpoint: returns ``(meta, {keystr: np.ndarray})``.
+
+    Checks the format version and every leaf's CRC32; any failure raises
+    :class:`CheckpointError` with the offending leaf/file named."""
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except OSError as e:
+        raise CheckpointError(f"cannot read checkpoint {path!r}: {e}") from e
+    try:
+        payload = msgpack.unpackb(raw, raw=False, strict_map_key=False)
+    except Exception as e:  # truncated file, stray bytes, wrong framing
+        raise CheckpointError(
+            f"{path!r}: truncated or corrupt msgpack payload ({e})") from e
+    if not isinstance(payload, dict):
+        raise CheckpointError(f"{path!r}: not a checkpoint manifest")
+    version = payload.get("version")
+    if version != FORMAT_VERSION:
+        raise CheckpointError(
+            f"{path!r}: checkpoint format version {version!r} != "
+            f"supported {FORMAT_VERSION}")
+    leaves = payload.get("leaves")
+    if not isinstance(leaves, dict):
+        raise CheckpointError(f"{path!r}: manifest has no leaves table")
+    return payload.get("meta", {}), \
+        {name: _unpack_leaf(name, d) for name, d in leaves.items()}
 
 
 def load_pytree(path: str, template: Any):
     """Load into the structure of ``template`` (shape/dtype-checked)."""
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=True)
-    leaves = payload[b"leaves"]
+    _, leaves = load_manifest(path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     out = []
     for p, tleaf in flat:
-        key = jax.tree_util.keystr(p).encode()
+        key = jax.tree_util.keystr(p)
         if key not in leaves:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = _unpack_leaf(leaves[key])
+            raise CheckpointError(f"checkpoint missing leaf {key!r}")
+        arr = leaves[key]
         if tuple(arr.shape) != tuple(tleaf.shape):
-            raise ValueError(f"shape mismatch at {key!r}: "
-                             f"{arr.shape} vs {tleaf.shape}")
-        out.append(arr.astype(tleaf.dtype))
+            raise CheckpointError(f"shape mismatch at {key!r}: "
+                                  f"{arr.shape} vs {tleaf.shape}")
+        out.append(jnp.asarray(arr.astype(np.dtype(tleaf.dtype))))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,177 @@
+"""Versioned snapshot/restore of the full ``FederatedZO`` server state.
+
+The state inventory (everything a bit-exact resume needs — DESIGN.md
+§11): parameters, FedAvgM velocity, the round counter, ``CommLog``
+byte counters, per-client GradIP trajectories *including explicit
+gaps*, VPCS early-stop flags, per-client data pointers, the straggler
+pending-upload queue, the eval history, and a config fingerprint
+``(fl.seed, T, n_dirs, K, space.n, lr, eps, ...)``.  All round
+randomness is derivable from ``(fl.seed, round, T)`` via the seed
+ladder (``core/seeds.round_keys``), so no RNG state is stored: a
+restored server replays the exact uninterrupted trajectory.
+
+Mesh portability: arrays are gathered to host at save
+(``io._pack_leaf`` goes through ``jax.device_get``), and restore
+re-places them through the *target* server's plan
+(``FLShardPlan.place_params`` / plain ``jnp.asarray``) — so a
+checkpoint written under a 2x2 ``FLShardPlan`` restores onto an
+unsharded server and vice versa, bit-exactly (FSDP placement never
+changes values; DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.checkpoint.io import (CheckpointError, load_manifest,
+                                 save_pytree)
+
+STATE_VERSION = 1
+
+# conventional file names inside a --checkpoint-dir
+LATEST_NAME = "ckpt_latest.msgpack"
+FINAL_NAME = "ckpt_final.msgpack"
+
+# config fields that must match between checkpoint and restore target:
+# they determine the seed ladder, the group programs and the protocol
+# accounting, so a mismatch silently breaks bit-exact replay.
+_CONFIG_FIELDS = ("seed", "local_steps", "n_dirs", "lr", "eps",
+                  "server_momentum")
+
+
+def _keystr(*parts) -> str:
+    return "".join(f"['{p}']" for p in parts)
+
+
+def _config_fingerprint(server) -> dict:
+    fl = server.fl
+    cfg = {f: getattr(fl, f, None) for f in _CONFIG_FIELDS}
+    cfg["n_clients"] = len(server.clients)
+    cfg["space_n"] = int(server.space.n)
+    cfg["high_freq"] = bool(server.high_freq)
+    return cfg
+
+
+def save_server_state(path: str, server, extra_meta: dict | None = None
+                      ) -> str:
+    """Write a full server snapshot to ``path`` (atomic; io.py format)."""
+    import jax
+    tree = {"params": jax.device_get(server.params)}
+    if server.velocity is not None:
+        tree["velocity"] = np.asarray(jax.device_get(server.velocity))
+    gradip, gradip_len = {}, {}
+    for cid, entries in server.gradip_log.items():
+        gradip_len[str(cid)] = len(entries)
+        present = {str(i): np.asarray(e) for i, e in enumerate(entries)
+                   if e is not None}
+        if present:
+            gradip[str(cid)] = present
+    if gradip:
+        tree["gradip"] = gradip
+    pending_meta, pending_gs = [], {}
+    for j, ent in enumerate(server._pending):
+        pending_meta.append({k: int(ent[k]) for k in
+                             ("arrive", "cid", "src_round", "gip_idx")})
+        pending_gs[str(j)] = np.asarray(ent["gs"])
+    if pending_gs:
+        tree["pending"] = pending_gs
+    meta = {
+        "state_version": STATE_VERSION,
+        "round": int(server.round),
+        "up_bytes": int(server.comm.up_bytes),
+        "down_bytes": int(server.comm.down_bytes),
+        "ptrs": {str(c.cid): int(c.ptr) for c in server.clients},
+        "early_stopped": sorted(int(c) for c in server.early_stopped),
+        "has_velocity": server.velocity is not None,
+        "gradip_len": gradip_len,
+        "pending": pending_meta,
+        "history": server.history,
+        "config": _config_fingerprint(server),
+    }
+    if extra_meta:
+        meta["extra"] = extra_meta
+    save_pytree(path, tree, metadata=meta)
+    return path
+
+
+def _check_config(meta: dict, server, path: str):
+    saved = meta.get("config", {})
+    here = _config_fingerprint(server)
+    diffs = {k: (saved.get(k), here[k]) for k in here
+             if saved.get(k) != here[k]}
+    if diffs:
+        raise CheckpointError(
+            f"{path!r}: checkpoint/server config mismatch "
+            f"(field: saved vs here): {diffs}")
+
+
+def restore_server_state(path: str, server) -> dict:
+    """Restore a snapshot written by :func:`save_server_state` into
+    ``server`` (any mesh plan).  Returns the checkpoint meta dict."""
+    import jax
+    import jax.numpy as jnp
+    meta, leaves = load_manifest(path)
+    if meta.get("state_version") != STATE_VERSION:
+        raise CheckpointError(
+            f"{path!r}: server-state version "
+            f"{meta.get('state_version')!r} != supported {STATE_VERSION}")
+    _check_config(meta, server, path)
+
+    # -- params: template-checked against the live tree, re-placed per
+    # the *target* plan (mesh reshape happens here) ---------------------
+    flat, treedef = jax.tree_util.tree_flatten_with_path(server.params)
+    out = []
+    for p, tleaf in flat:
+        key = "['params']" + jax.tree_util.keystr(p)
+        if key not in leaves:
+            raise CheckpointError(f"{path!r}: missing param leaf {key!r}")
+        arr = leaves[key]
+        if tuple(arr.shape) != tuple(tleaf.shape):
+            raise CheckpointError(
+                f"{path!r}: shape mismatch at {key!r}: "
+                f"{arr.shape} vs {tleaf.shape}")
+        out.append(arr.astype(np.dtype(tleaf.dtype)))
+    host_params = jax.tree_util.tree_unflatten(treedef, out)
+    if server.plan is not None:
+        server.params = server.plan.place_params(host_params)
+    else:
+        server.params = jax.tree.map(jnp.asarray, host_params)
+
+    server.velocity = (jnp.asarray(leaves[_keystr("velocity")])
+                       if meta.get("has_velocity") else None)
+
+    # -- scalar state ----------------------------------------------------
+    server.round = int(meta["round"])
+    server.comm.up_bytes = int(meta["up_bytes"])
+    server.comm.down_bytes = int(meta["down_bytes"])
+    server.early_stopped = set(int(c) for c in meta["early_stopped"])
+    server.history = list(meta.get("history", []))
+
+    ptrs = meta["ptrs"]
+    have = {str(c.cid) for c in server.clients}
+    if set(ptrs) != have:
+        raise CheckpointError(
+            f"{path!r}: client id mismatch: checkpoint {sorted(ptrs)} "
+            f"vs server {sorted(have)}")
+    for c in server.clients:
+        c.ptr = int(ptrs[str(c.cid)])
+
+    # -- GradIP trajectories with explicit gaps --------------------------
+    gradip_len = meta.get("gradip_len", {})
+    log = {}
+    for c in server.clients:
+        n = int(gradip_len.get(str(c.cid), 0))
+        log[c.cid] = [leaves.get(_keystr("gradip", str(c.cid), str(i)))
+                      for i in range(n)]
+    server.gradip_log = log
+
+    # -- straggler pending-upload queue -----------------------------------
+    pending = []
+    for j, ent in enumerate(meta.get("pending", [])):
+        key = _keystr("pending", str(j))
+        if key not in leaves:
+            raise CheckpointError(f"{path!r}: missing pending leaf {key!r}")
+        pending.append(dict(arrive=int(ent["arrive"]), cid=int(ent["cid"]),
+                            src_round=int(ent["src_round"]),
+                            gip_idx=int(ent["gip_idx"]), gs=leaves[key]))
+    server._pending = pending
+    return meta

@@ -44,10 +44,17 @@ def make_fl_train_step(per_example_loss: Callable, space, *, eps: float,
     shardings and replicates all downstream matmuls (see DESIGN.md §perf).
     When it is set, backend="auto" resolves to the pytree route: flattening
     a tensor-parallel weight is not GSPMD-representable, so the fused flat
-    kernels are reserved for the unsharded / FSDP-only regimes."""
+    kernels are reserved for the unsharded / FSDP-only regimes.
+
+    The optional trailing ``report_mask`` ([K] 0/1) is the compiled-path
+    dropout model: clients whose upload was lost are excluded from the
+    scalar collective — ``g = sum(mask * g_k) / max(1, sum(mask))`` — so
+    the step aggregates over survivors without recompiling per fault
+    pattern (the mask is a runtime operand).  ``None`` (and an all-ones
+    mask) is exactly the fault-free mean."""
     cp = constrain_params or (lambda p: p)
 
-    def step(params, key, batch):
+    def step(params, key, batch, report_mask=None):
         backing = get_backing(space, params)
         be = resolve_backend(backend, backing,
                              sharded=constrain_params is not None)
@@ -65,7 +72,11 @@ def make_fl_train_step(per_example_loss: Callable, space, *, eps: float,
             l_minus = per_example_loss(cp(backing.unflatten(wm)), batch)
         g_clients = (l_plus - l_minus).reshape(n_clients, -1).mean(-1) \
             / (2.0 * eps)
-        g = jnp.mean(g_clients)                           # scalar collective
+        if report_mask is None:
+            g = jnp.mean(g_clients)                       # scalar collective
+        else:
+            m = report_mask.astype(g_clients.dtype)
+            g = jnp.sum(g_clients * m) / jnp.maximum(jnp.sum(m), 1.0)
         if be == "ref":
             new_params = cp(space.add(w_minus, (eps - lr * g) * z))
         else:

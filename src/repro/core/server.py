@@ -17,6 +17,14 @@ same round executes sharded on a device mesh — parameters per
 so reconstruction, aggregation, GradIP trajectories and VPCS decisions are
 bit-identical to the single-device path (DESIGN.md §9; parity-tested by
 ``tools/fl_mesh_parity.py``).
+
+**Fault tolerance** (DESIGN.md §11): ``run_round(faults=)`` tolerates
+clients dropping (aggregate over survivors) and straggling (bounded
+staleness, seed-replayed exactly at arrival), and
+``save_checkpoint``/``load_checkpoint`` snapshot/restore the complete
+server state for bit-exact resume after a kill — including across mesh
+shapes.  Deterministic fault schedules come from
+``repro.fault.FaultPlan``.
 """
 from __future__ import annotations
 
@@ -123,6 +131,10 @@ class FederatedZO:
         self.early_stopped: set = set()
         self.velocity = None  # FedAvgM server momentum state (beyond-paper)
         self.gradip_log: Dict[int, list] = {c.cid: [] for c in self.clients}
+        # straggler uploads in flight: dicts of (arrive, cid, src_round,
+        # gip_idx, gs) — part of the checkpointed state (DESIGN.md §11)
+        self._pending: List[dict] = []
+        self.last_round_info: Optional[dict] = None
         self._batch_runs: Dict[int, Callable] = {}
         self._recon = jax.jit(
             lambda keys, gs: jax.vmap(
@@ -190,8 +202,8 @@ class FederatedZO:
         return (self.plan.place_replicated(keys),
                 self.plan.place_client_batches(batches, n_group))
 
-    # -- one federated round (Alg. 2) ---------------------------------------
-    def run_round(self, gp_vec=None):
+    # -- one federated round (Alg. 2 + the failure model) --------------------
+    def run_round(self, gp_vec=None, faults=None):
         """Execute one round: group clients by local-step count T, run each
         group's local ZO loops (vmapped; sharded under a ``plan``), account
         the scalar uploads, reconstruct every client's virtual path from
@@ -199,13 +211,50 @@ class FederatedZO:
 
         ``gp_vec`` ([n] pre-training gradient): also log each client's
         GradIP trajectory for this round.  Returns {cid: gs [T] or
-        [T, n_dirs]} — the scalars each client uploaded."""
+        [T, n_dirs]} — the scalars each client uploaded *this round*.
+
+        ``faults`` (a :class:`repro.fault.RoundFaults`) injects the
+        failure model:
+
+        * ``drops`` — offline clients: no local steps, no traffic, data
+          pointer frozen, an explicit ``None`` gap in ``gradip_log``.
+        * ``late`` (cid -> delay) — stragglers: they run this round's
+          local steps on its seeds/data, but the scalar upload lands
+          ``delay`` rounds later.  Because the seed ladder derives every
+          key from ``(fl.seed, round, T)``, the server replays the stale
+          virtual path bit-exactly at arrival (``VP.reconstruct_delta``
+          with the *source* round's keys).  Uplink bytes are counted at
+          arrival — ``CommLog`` records traffic when it happens.
+        * ``kill`` — SIGKILL the server mid-round (after client compute,
+          before the update applies): the preemption the checkpoint/
+          resume path recovers from.
+
+        The round aggregates over whoever actually reported — prompt
+        survivors plus stragglers landing this round — via the
+        survivor-count-aware :func:`VP.aggregate`; a zero-reporter round
+        applies a zero update.  Diagnostics land in
+        ``self.last_round_info``."""
+        from repro.fault.plan import NO_FAULTS
+        f = faults if faults is not None else NO_FAULTS
         r = self.round
         groups: Dict[int, List[Client]] = {}
         for c in self.clients:
             groups.setdefault(self._client_T(c.cid), []).append(c)
-        deltas, gs_by_cid = [], {}
-        for T, cs in groups.items():
+        # deterministic grouping: sorted-T iteration below, and each client
+        # in exactly one group — resume replay and the mesh-parity harness
+        # must never depend on dict insertion order or see a client twice
+        cids = [c.cid for cs in groups.values() for c in cs]
+        assert len(cids) == len(self.clients) == len(set(cids)), \
+            "each client must appear in exactly one T-group"
+        deltas, gs_by_cid, arrived = [], {}, []
+        for T in sorted(groups):
+            if gp_vec is not None:
+                for c in groups[T]:
+                    if c.cid in f.drops:
+                        self.gradip_log[c.cid].append(None)  # explicit gap
+            cs = [c for c in groups[T] if c.cid not in f.drops]
+            if not cs:
+                continue
             keys = S.round_keys(self.fl.seed, r, T)
             batches = self._stack([c.next_batches(T) for c in cs])
             grp = self._batch_run_for(T, len(cs), template_batches=batches)
@@ -217,8 +266,24 @@ class FederatedZO:
             #     scalars are gathered to host first so replay/aggregation
             #     run identically under any mesh shape (DESIGN.md §9).
             gs = np.asarray(gs)
-            deltas.append(np.asarray(self._recon(keys, jnp.asarray(gs))))
-            for c, g in zip(cs, gs):
+            prompt = [i for i, c in enumerate(cs) if c.cid not in f.late]
+            if prompt:
+                deltas.append(np.asarray(self._recon(
+                    keys, jnp.asarray(gs[np.asarray(prompt)]))))
+            for i, c in enumerate(cs):
+                g = gs[i]
+                if c.cid in f.late:
+                    # straggler: the downlink happened (it participated),
+                    # the upload is in flight until its arrival round
+                    self.comm.add(up=0, down=self._down_bytes(T))
+                    gip_idx = -1
+                    if gp_vec is not None:
+                        self.gradip_log[c.cid].append(None)
+                        gip_idx = len(self.gradip_log[c.cid]) - 1
+                    self._pending.append(dict(
+                        arrive=r + int(f.late[c.cid]), cid=c.cid,
+                        src_round=r, gip_idx=gip_idx, gs=g))
+                    continue
                 gs_by_cid[c.cid] = g
                 # upload = every projected-gradient scalar: T with n_dirs=1,
                 # T*K for the multi-direction estimator ([T, K] gs)
@@ -228,10 +293,38 @@ class FederatedZO:
                                                   jnp.asarray(_per_step(g)),
                                                   gp_vec)
                     self.gradip_log[c.cid].append(np.asarray(ips))
-        # (3) aggregate reconstructed sparse updates (+ optional FedAvgM
-        # server momentum on the sparse value vector — beyond-paper)
-        agg = VP.aggregate(jnp.concatenate([jnp.asarray(d) for d in deltas],
-                                           axis=0))
+        # (2b) stragglers landing this round: replay their virtual path with
+        # the *source* round's seed keys — exact, because the seed ladder is
+        # a pure function of (fl.seed, round, T); fill the GradIP gap logged
+        # at the source round (deterministic order: by source round then cid)
+        due = sorted((p for p in self._pending if p["arrive"] <= r),
+                     key=lambda p: (p["src_round"], p["cid"]))
+        self._pending = [p for p in self._pending if p["arrive"] > r]
+        for p in due:
+            gs_l = np.asarray(p["gs"])
+            src_keys = S.round_keys(self.fl.seed, p["src_round"],
+                                    gs_l.shape[0])
+            deltas.append(np.asarray(self._recon(src_keys,
+                                                 jnp.asarray(gs_l[None]))))
+            self.comm.add(up=4 * gs_l.size, down=0)
+            if gp_vec is not None and p["gip_idx"] >= 0:
+                ips, _, _ = gradip_trajectory(self.space, src_keys,
+                                              jnp.asarray(_per_step(gs_l)),
+                                              gp_vec)
+                self.gradip_log[p["cid"]][p["gip_idx"]] = np.asarray(ips)
+            arrived.append((p["cid"], p["src_round"], gs_l))
+        if f.kill:
+            from repro.fault import plan as _fault_plan
+            _fault_plan.kill_now()  # mid-round: work done, update not applied
+        # (3) aggregate the reconstructed sparse updates of whoever reported
+        # (+ optional FedAvgM server momentum — beyond-paper)
+        n_report = sum(int(d.shape[0]) for d in deltas)
+        if n_report:
+            agg = VP.aggregate(
+                jnp.concatenate([jnp.asarray(d) for d in deltas], axis=0),
+                n_report)
+        else:  # zero-survivor round: well-defined no-op update
+            agg = jnp.zeros((self.space.n,), jnp.float32)
         if self.fl.server_momentum > 0.0:
             self.velocity = (agg if self.velocity is None
                              else self.fl.server_momentum * self.velocity
@@ -241,6 +334,10 @@ class FederatedZO:
             agg = self.plan.place_replicated(agg)
         self.params = self.space.add(self.params, agg)
         self.round += 1
+        self.last_round_info = dict(
+            round=r, n_reporting=n_report, drops=sorted(f.drops),
+            late=dict(f.late), arrived=arrived,
+            pending=len(self._pending))
         return gs_by_cid
 
     def _down_bytes(self, T: int) -> int:
@@ -286,14 +383,44 @@ class FederatedZO:
         ids = rng.choice([c.cid for c in self.clients], size=n, replace=False)
         self.early_stopped = set(int(i) for i in ids)
 
+    # -- fault tolerance: snapshot / restore ---------------------------------
+    def save_checkpoint(self, path: str) -> str:
+        """Atomically snapshot the full server state (params, velocity,
+        round, CommLog, GradIP trajectories + gaps, VPCS flags, client
+        data pointers, straggler queue, history) to ``path``
+        (``checkpoint/state.py``; bit-exact resume, any mesh plan)."""
+        from repro.checkpoint.state import save_server_state
+        return save_server_state(path, self)
+
+    def load_checkpoint(self, path: str) -> dict:
+        """Restore a :meth:`save_checkpoint` snapshot into this server
+        (config-fingerprint checked; params re-placed per this server's
+        ``plan``, so the checkpoint may come from a different mesh
+        shape).  Returns the checkpoint meta dict."""
+        from repro.checkpoint.state import restore_server_state
+        return restore_server_state(path, self)
+
     # -- training loop -------------------------------------------------------
     def run(self, rounds: int, eval_every: int = 0, eval_batch=None,
-            gp_vec=None, verbose: bool = False):
+            gp_vec=None, verbose: bool = False, fault_plan=None,
+            checkpoint_dir=None, checkpoint_every: int = 0):
         """Run ``rounds`` federated rounds; evaluate every ``eval_every``
         rounds with ``eval_fn(params, eval_batch)``.  Returns the history
-        list of metric dicts (each tagged with its round index)."""
+        list of metric dicts (each tagged with its round index).
+
+        ``fault_plan`` (a :class:`repro.fault.FaultPlan`) injects that
+        plan's per-round drop/late/kill events.  With ``checkpoint_dir``
+        set, the server snapshot is written to
+        ``<dir>/ckpt_latest.msgpack`` every ``checkpoint_every`` rounds
+        (after eval, so the history is captured); cadence and eval use
+        the *global* round index, so a resumed run checkpoints and
+        evaluates on the same schedule as an uninterrupted one."""
+        import os
+        from repro.checkpoint.state import LATEST_NAME
         for _ in range(rounds):
-            self.run_round(gp_vec=gp_vec)
+            faults = (fault_plan.round_faults(self.round)
+                      if fault_plan is not None else None)
+            self.run_round(gp_vec=gp_vec, faults=faults)
             if eval_every and self.round % eval_every == 0 \
                     and self.eval_fn is not None:
                 m = self.eval_fn(self.params, eval_batch)
@@ -304,4 +431,8 @@ class FederatedZO:
                     print(f"  round {self.round}: " +
                           " ".join(f"{k}={v:.4f}" for k, v in m.items()
                                    if k != "round"))
+            if checkpoint_dir and checkpoint_every \
+                    and self.round % checkpoint_every == 0:
+                self.save_checkpoint(os.path.join(checkpoint_dir,
+                                                  LATEST_NAME))
         return self.history

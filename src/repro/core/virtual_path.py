@@ -44,6 +44,21 @@ def reconstruct_grad_vecs(space, keys, gs):
     return jax.vmap(one)(keys, gs)
 
 
-def aggregate(deltas):
-    """FedAvg aggregation of reconstructed sparse client deltas: [K, n]."""
-    return jnp.mean(deltas, axis=0)
+def aggregate(deltas, n_reporting=None):
+    """FedAvg aggregation of reconstructed sparse client deltas: [K, n].
+
+    ``n_reporting`` makes the normalization explicit for fault-tolerant
+    rounds (FedMeZO-style: the mean is over whichever subset actually
+    reported, so aggregation stays well-defined under client dropout).
+    It defaults to ``deltas.shape[0]`` — plain FedAvg over the rows
+    given — and must match it unless a caller deliberately rescales
+    (e.g. normalizing by the full fleet to damp partial rounds).  A
+    zero-survivor round has no rows to average: callers apply a zero
+    update instead of calling this with an empty stack."""
+    n = deltas.shape[0] if n_reporting is None else int(n_reporting)
+    if n <= 0 or deltas.shape[0] == 0:
+        raise ValueError(
+            f"aggregate needs >= 1 reporting client (got rows="
+            f"{deltas.shape[0]}, n_reporting={n_reporting}); zero-survivor "
+            "rounds apply a zero update instead")
+    return jnp.sum(deltas, axis=0) / n

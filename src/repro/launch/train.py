@@ -19,6 +19,9 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --method full
   PYTHONPATH=src python -m repro.launch.train --vp --partition mixed
   PYTHONPATH=src python -m repro.launch.train --mesh 2x2 --rounds 4
+  PYTHONPATH=src python -m repro.launch.train --checkpoint-dir runs/ckpt \\
+      --checkpoint-every 1 --rounds 8   # then: same + --resume
+  PYTHONPATH=src python -m repro.launch.train --drop-rate 0.2 --late-rate 0.1
 """
 from __future__ import annotations
 
@@ -61,6 +64,7 @@ _force_mesh_devices(sys.argv[1:])
 import jax  # noqa: E402  (after the XLA_FLAGS pre-parse, by design)
 import numpy as np  # noqa: E402
 
+from repro.checkpoint.state import FINAL_NAME, LATEST_NAME
 from repro.configs import get_config
 from repro.configs.base import FLConfig
 from repro.configs.tiny import TINY
@@ -125,6 +129,27 @@ def main():
                     help="MEERKAT-VP: calibrate GradIP + early-stop")
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--out", default=None, help="write history json here")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="write server snapshots here (ckpt_latest every "
+                         "--checkpoint-every rounds, ckpt_final at the end)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="rounds between snapshots under --checkpoint-dir")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore ckpt_latest from --checkpoint-dir and "
+                         "continue to --rounds (bit-exact vs uninterrupted)")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="per-(round, client) offline probability "
+                         "(repro.fault.FaultPlan)")
+    ap.add_argument("--late-rate", type=float, default=0.0,
+                    help="per-(round, client) straggler probability; "
+                         "uploads land 1..--max-staleness rounds late")
+    ap.add_argument("--max-staleness", type=int, default=2,
+                    help="straggler staleness bound in rounds")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the deterministic fault schedule")
+    ap.add_argument("--kill-at-round", type=int, default=None,
+                    help="SIGKILL this process mid-round r (fault-injection "
+                         "harness; see tools/kill_recover.py)")
     a = ap.parse_args()
 
     cfg = TINY if a.arch == "tiny" else get_config(a.arch).reduced()
@@ -177,16 +202,44 @@ def main():
     server = FederatedZO(loss, params, space, fl, clients, eval_fn=evaluate,
                          plan=plan)
 
-    if a.vp:
+    fault_plan = None
+    if a.drop_rate or a.late_rate or a.kill_at_round is not None:
+        from repro.fault import FaultPlan
+        kills = (a.kill_at_round,) if a.kill_at_round is not None else ()
+        fault_plan = FaultPlan(a.clients, a.rounds, drop_rate=a.drop_rate,
+                               late_rate=a.late_rate,
+                               max_staleness=a.max_staleness,
+                               seed=a.fault_seed, kill_rounds=kills)
+        print("faults:", fault_plan.summary())
+
+    resumed = False
+    if a.resume:
+        if not a.checkpoint_dir:
+            ap.error("--resume requires --checkpoint-dir")
+        latest = os.path.join(a.checkpoint_dir, LATEST_NAME)
+        server.load_checkpoint(latest)
+        resumed = True
+        print(f"resumed from {latest} at round {server.round}")
+
+    if a.vp and not resumed:
+        # (resume restores the calibrated VPCS flags and the consumed data
+        # pointers; recalibrating would reset both and break bit-exactness)
         gp = pretrain_gradient_vec(lm_loss_fn, params, space, pre)
         results, flagged, _ = server.calibrate_vp(gp)
         print(f"VPCS flagged clients {flagged} "
               f"(rho_later={[round(r.rho_later, 2) for r in results]})")
 
-    m0 = evaluate(params, eval_batch)
-    print(f"round 0: acc={float(m0['acc']):.4f} loss={float(m0['loss']):.4f}")
-    server.run(a.rounds, eval_every=a.eval_every, eval_batch=eval_batch,
-               verbose=True)
+    m0 = evaluate(server.params, eval_batch)
+    print(f"round {server.round}: acc={float(m0['acc']):.4f} "
+          f"loss={float(m0['loss']):.4f}")
+    server.run(max(0, a.rounds - server.round), eval_every=a.eval_every,
+               eval_batch=eval_batch, verbose=True, fault_plan=fault_plan,
+               checkpoint_dir=a.checkpoint_dir,
+               checkpoint_every=a.checkpoint_every)
+    if a.checkpoint_dir:
+        final = server.save_checkpoint(os.path.join(a.checkpoint_dir,
+                                                    FINAL_NAME))
+        print("wrote", final)
     m = evaluate(server.params, eval_batch)
     print(f"final: acc={float(m['acc']):.4f} loss={float(m['loss']):.4f} "
           f"({time.time() - t0:.0f}s total)  comm: up={server.comm.up_bytes}B "

@@ -1,0 +1,101 @@
+"""Checkpoint file format (checkpoint/io.py): versioned, checksummed,
+atomic — and every failure mode surfaces as CheckpointError, never a raw
+msgpack/numpy error."""
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (FORMAT_VERSION, CheckpointError,
+                                 load_manifest, load_pytree, save_pytree)
+
+
+def _tree():
+    return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "inner": {"b": jnp.ones((5,), jnp.bfloat16),
+                      "n": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip_bitexact_and_meta(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_pytree(path, _tree(), metadata={"round": 3, "tag": "x"})
+    meta, leaves = load_manifest(path)
+    assert meta == {"round": 3, "tag": "x"}
+    assert set(leaves) == {"['w']", "['inner']['b']", "['inner']['n']"}
+    out = load_pytree(path, _tree())
+    for a, b in zip(jax.tree.leaves(_tree()), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_loaded_arrays_are_writable(tmp_path):
+    """Leaves must be copied out of msgpack's read-only buffer view."""
+    path = str(tmp_path / "ckpt.msgpack")
+    save_pytree(path, {"w": np.zeros((4,), np.float32)})
+    _, leaves = load_manifest(path)
+    leaves["['w']"][0] = 1.0  # would raise on a frombuffer view
+
+
+def test_corrupt_leaf_byte_fails_crc(tmp_path):
+    """Flip one byte of a leaf's payload on disk: the CRC must catch it."""
+    path = str(tmp_path / "ckpt.msgpack")
+    marker = np.full((64,), 0x5A5A5A5A, np.uint32)  # distinctive byte run
+    save_pytree(path, {"w": marker, "ok": np.arange(3, dtype=np.int64)})
+    blob = bytearray(open(path, "rb").read())
+    i = blob.find(marker.tobytes())
+    assert i > 0, "marker bytes not found in file"
+    blob[i + 17] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointError, match="CRC32"):
+        load_manifest(path)
+    with pytest.raises(CheckpointError, match="CRC32"):
+        load_pytree(path, {"w": marker, "ok": np.arange(3, dtype=np.int64)})
+
+
+def test_truncated_file(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_pytree(path, _tree())
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[: len(blob) // 2])
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        load_manifest(path)
+
+
+def test_missing_file(tmp_path):
+    with pytest.raises(CheckpointError, match="cannot read"):
+        load_manifest(str(tmp_path / "nope.msgpack"))
+
+
+def test_version_mismatch(tmp_path):
+    path = str(tmp_path / "old.msgpack")
+    payload = {"version": FORMAT_VERSION - 1, "meta": {}, "leaves": {}}
+    open(path, "wb").write(msgpack.packb(payload, use_bin_type=True))
+    with pytest.raises(CheckpointError, match="format version"):
+        load_manifest(path)
+
+
+def test_not_a_manifest(tmp_path):
+    path = str(tmp_path / "junk.msgpack")
+    open(path, "wb").write(msgpack.packb([1, 2, 3]))
+    with pytest.raises(CheckpointError, match="not a checkpoint"):
+        load_manifest(path)
+
+
+def test_missing_leaf_and_shape_mismatch(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_pytree(path, {"w": np.zeros((2, 2), np.float32)})
+    with pytest.raises(CheckpointError, match="missing leaf"):
+        load_pytree(path, {"w": np.zeros((2, 2), np.float32),
+                           "extra": np.zeros((1,), np.float32)})
+    with pytest.raises(CheckpointError, match="shape mismatch"):
+        load_pytree(path, {"w": np.zeros((4,), np.float32)})
+
+
+def test_atomic_write_leaves_no_tmp(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_pytree(path, _tree())
+    save_pytree(path, _tree())  # overwrite in place
+    assert os.listdir(tmp_path) == ["ckpt.msgpack"]

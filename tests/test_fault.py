@@ -1,0 +1,231 @@
+"""The failure model (repro.fault + FederatedZO.run_round(faults=)):
+deterministic FaultPlan schedules, dropout survivor parity, bit-exact
+straggler replay, fault-aware CommLog accounting, GradIP gaps, and the
+compiled-path report_mask dropout in make_fl_train_step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.configs.tiny import TINY
+from repro.core import random_mask
+from repro.core import virtual_path as VP
+from repro.core.fl_step import make_fl_train_step
+from repro.core.server import Client, FederatedZO
+from repro.data.synthetic import TaskSpec, make_task_fns, sample_dataset
+from repro.fault import NO_FAULTS, FaultPlan, RoundFaults
+from repro.models import Model
+
+SPEC = TaskSpec(vocab=min(TINY.vocab, 512))
+
+
+@pytest.fixture(scope="module")
+def prob():
+    model = Model(TINY)
+    params = model.init(jax.random.key(0))
+    loss, per_example, _ = make_task_fns(model, SPEC)
+    space = random_mask(params, density=1e-2, seed=0, balanced=False)
+    return dict(params=params, loss=loss, per_example=per_example,
+                space=space)
+
+
+def mk_server(prob, n_clients=3, T=2, momentum=0.0, client_ids=None):
+    fl = FLConfig(n_clients=n_clients, local_steps=T, batch_size=2,
+                  server_momentum=momentum)
+    ids = client_ids or list(range(n_clients))
+    clients = [Client(i, sample_dataset(SPEC, 8, seed=i), 2) for i in ids]
+    return FederatedZO(prob["loss"], prob["params"], prob["space"], fl,
+                       clients)
+
+
+def flat(tree):
+    return np.concatenate([np.asarray(x).ravel()
+                           for x in jax.tree.leaves(tree)])
+
+
+# -- FaultPlan ---------------------------------------------------------------
+
+def test_fault_plan_deterministic_and_bounded():
+    a = FaultPlan(8, 10, drop_rate=0.3, late_rate=0.2, max_staleness=3,
+                  seed=7, kill_rounds=(4,))
+    b = FaultPlan(8, 10, drop_rate=0.3, late_rate=0.2, max_staleness=3,
+                  seed=7, kill_rounds=(4,))
+    for r in range(12):
+        fa = a.round_faults(r)
+        assert fa == b.round_faults(r)
+        assert not (fa.drops & set(fa.late))  # a client fails one way
+        assert all(1 <= d <= 3 for d in fa.late.values())
+    assert a.kill_at(4) and not a.kill_at(3)
+    assert a.round_faults(10) == NO_FAULTS  # past the schedule: clean
+    s = a.summary()
+    assert s["n_drop_events"] > 0 and s["n_late_events"] > 0
+    assert a.round_faults(4).kill
+
+
+def test_fault_plan_seed_changes_schedule():
+    a = FaultPlan(8, 20, drop_rate=0.3, seed=0)
+    b = FaultPlan(8, 20, drop_rate=0.3, seed=1)
+    assert any(a.round_faults(r) != b.round_faults(r) for r in range(20))
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(4, 5, drop_rate=0.7, late_rate=0.5)  # rates sum > 1
+    with pytest.raises(ValueError):
+        FaultPlan(4, 5, drop_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(4, 5, late_rate=0.1, max_staleness=0)
+    with pytest.raises(ValueError):
+        FaultPlan(0, 5)
+
+
+def test_round_faults_empty():
+    assert NO_FAULTS.empty
+    assert not RoundFaults(drops=frozenset({1})).empty
+    assert not RoundFaults(late={2: 1}).empty
+    assert not RoundFaults(kill=True).empty
+
+
+# -- dropout -----------------------------------------------------------------
+
+def test_dropout_survivor_parity(prob):
+    """A round where client 2 is offline must equal, bit for bit, the
+    same round run by a fleet that never contained client 2 (survivors'
+    seeds/data/recon are untouched; FedAvg renormalizes over 2)."""
+    gp = jnp.full((prob["space"].n,), 0.01, jnp.float32)
+    full = mk_server(prob, n_clients=3)
+    full.run_round(gp_vec=gp, faults=RoundFaults(drops=frozenset({2})))
+    survivors = mk_server(prob, n_clients=2)
+    survivors.run_round(gp_vec=gp)
+    assert np.array_equal(flat(full.params), flat(survivors.params))
+    # the dropped client: frozen pointer, explicit GradIP gap, no bytes
+    assert full.clients[2].ptr == 0
+    assert full.gradip_log[2] == [None]
+    assert full.last_round_info["n_reporting"] == 2
+    assert full.last_round_info["drops"] == [2]
+
+
+def test_dropout_comm_counts_survivors_only(prob):
+    T = 2
+    srv = mk_server(prob, n_clients=3, T=T)
+    srv.run_round(faults=RoundFaults(drops=frozenset({0})))
+    per_up = 4 * T
+    down = srv._down_bytes(T)
+    assert srv.comm.up_bytes == 2 * per_up
+    assert srv.comm.down_bytes == 2 * down
+
+
+def test_zero_survivor_round_is_noop_update(prob):
+    srv = mk_server(prob, n_clients=3)
+    p0 = flat(srv.params)
+    srv.run_round(faults=RoundFaults(drops=frozenset({0, 1, 2})))
+    assert np.array_equal(p0, flat(srv.params))
+    assert srv.round == 1 and srv.comm.up_bytes == 0
+    assert srv.last_round_info["n_reporting"] == 0
+    assert [c.ptr for c in srv.clients] == [0, 0, 0]
+
+
+# -- stragglers ----------------------------------------------------------------
+
+def test_straggler_upload_is_bitexact_and_gap_filled(prob):
+    """A late client computes on the round's own seeds/data; its queued
+    scalars and the arrival-time GradIP must bit-match the fault-free
+    twin's round-0 values (the seed ladder makes stale replay exact)."""
+    gp = jnp.full((prob["space"].n,), 0.01, jnp.float32)
+    twin = mk_server(prob, n_clients=3)
+    gs0 = twin.run_round(gp_vec=gp)
+
+    srv = mk_server(prob, n_clients=3)
+    reported = srv.run_round(gp_vec=gp, faults=RoundFaults(late={1: 1}))
+    assert 1 not in reported  # upload in flight
+    assert srv.gradip_log[1] == [None]
+    assert len(srv._pending) == 1
+    assert np.array_equal(srv._pending[0]["gs"], np.asarray(gs0[1]))
+    assert srv.clients[1].ptr == twin.clients[1].ptr  # it did the work
+
+    srv.run_round(gp_vec=gp)  # arrival round
+    assert srv._pending == []
+    assert np.array_equal(srv.gradip_log[1][0], twin.gradip_log[1][0])
+    assert srv.last_round_info["arrived"][0][:2] == (1, 0)
+
+
+def test_straggler_comm_bytes_settle_to_fault_free_totals(prob):
+    """Late uploads are billed at arrival, downlinks at participation —
+    once everything lands, totals equal the fault-free run's."""
+    clean = mk_server(prob, n_clients=3)
+    clean.run_round()
+    clean.run_round()
+    srv = mk_server(prob, n_clients=3)
+    srv.run_round(faults=RoundFaults(late={0: 1, 2: 1}))
+    up_mid = srv.comm.up_bytes
+    srv.run_round()
+    assert up_mid == 4 * 2  # only client 1's T=2 scalars billed so far
+    assert srv.comm.up_bytes == clean.comm.up_bytes
+    assert srv.comm.down_bytes == clean.comm.down_bytes
+
+
+def test_staleness_bound_respected(prob):
+    srv = mk_server(prob, n_clients=3)
+    srv.run_round(faults=RoundFaults(late={1: 2}))
+    srv.run_round()
+    assert len(srv._pending) == 1  # not due yet
+    srv.run_round()
+    assert srv._pending == []
+
+
+# -- aggregation + grouping ----------------------------------------------------
+
+def test_aggregate_n_reporting():
+    deltas = jnp.asarray([[2.0, 4.0], [4.0, 8.0]])
+    np.testing.assert_allclose(np.asarray(VP.aggregate(deltas)),
+                               [3.0, 6.0])
+    np.testing.assert_allclose(np.asarray(VP.aggregate(deltas, 4)),
+                               [1.5, 3.0])
+    with pytest.raises(ValueError):
+        VP.aggregate(deltas, 0)
+    with pytest.raises(ValueError):
+        VP.aggregate(jnp.zeros((0, 2)))
+
+
+def test_mixed_T_groups_with_faults(prob):
+    """Sorted-T grouping + faults: early-stopped clients (T=1 group) and
+    full-T clients drop/straggle independently without double-running."""
+    gp = jnp.full((prob["space"].n,), 0.01, jnp.float32)
+    srv = mk_server(prob, n_clients=4)
+    srv.early_stopped = {1, 3}
+    srv.run_round(gp_vec=gp,
+                  faults=RoundFaults(drops=frozenset({3}), late={0: 1}))
+    assert srv.gradip_log[3] == [None]
+    assert len(srv._pending) == 1 and srv._pending[0]["cid"] == 0
+    assert srv._pending[0]["gs"].shape == (2,)  # full-T straggler
+    assert srv.last_round_info["n_reporting"] == 2
+    srv.run_round(gp_vec=gp)
+    assert all(srv.gradip_log[c][0] is not None for c in (0, 1, 2))
+
+
+# -- compiled-path dropout (fl_step) --------------------------------------------
+
+def test_train_step_report_mask_matches_masked_mean(prob):
+    n_clients, B = 4, 8
+    step = make_fl_train_step(prob["per_example"], prob["space"],
+                              eps=1e-3, lr=5e-2, n_clients=n_clients)
+    jstep = jax.jit(step)
+    batch = {k: jnp.asarray(v)
+             for k, v in sample_dataset(SPEC, B, seed=5).items()}
+    key = jax.random.key(3)
+    _, g_clients, _ = jstep(prob["params"], key, batch)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    p_m, g_m, metrics = jstep(prob["params"], key, batch, mask)
+    assert np.array_equal(np.asarray(g_m), np.asarray(g_clients))
+    want = float((g_clients[0] + g_clients[2]) / 2.0)
+    np.testing.assert_allclose(float(metrics["g"]), want, rtol=1e-6)
+    # all-ones mask == None (fault-free) to float equality of the update
+    p_none, _, m_none = jstep(prob["params"], key, batch)
+    p_ones, _, m_ones = jstep(prob["params"], key, batch, jnp.ones((4,)))
+    np.testing.assert_allclose(float(m_none["g"]), float(m_ones["g"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(flat(p_none), flat(p_ones), atol=1e-7)
+    # zero mask guard: no division blow-up
+    _, _, m_zero = jstep(prob["params"], key, batch, jnp.zeros((4,)))
+    assert np.isfinite(float(m_zero["g"]))

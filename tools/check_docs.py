@@ -27,6 +27,7 @@ CLIS = {
     "repro.launch.serve": "src/repro/launch/serve.py",
     "repro.analysis": "src/repro/analysis/cli.py",
     "repro.kernels.autotune": "src/repro/kernels/autotune.py",
+    "benchmarks.fault_bench": "benchmarks/fault_bench.py",
 }
 
 
