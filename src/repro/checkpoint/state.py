@@ -5,10 +5,21 @@ The state inventory (everything a bit-exact resume needs — DESIGN.md
 byte counters, per-client GradIP trajectories *including explicit
 gaps*, VPCS early-stop flags, per-client data pointers, the straggler
 pending-upload queue, the eval history, and a config fingerprint
-``(fl.seed, T, n_dirs, K, space.n, lr, eps, ...)``.  All round
-randomness is derivable from ``(fl.seed, round, T)`` via the seed
-ladder (``core/seeds.round_keys``), so no RNG state is stored: a
-restored server replays the exact uninterrupted trajectory.
+``(fl.seed, T, n_dirs, K, space.n, lr, eps, sample_frac, quantize,
+...)``.  All round randomness is derivable from ``(fl.seed, round, T)``
+via the seed ladder (``core/seeds.round_keys``) — including the
+exact-replay quantizer's rounding noise — so the only RNG state stored
+is the **client sampler's** (state_version 2): its stateful generator
+advances one draw per round, and restoring its serialized bit-generator
+state makes a resumed server re-draw the killed round's cohort
+identically.  Everything else replays the exact uninterrupted
+trajectory from the ladder.
+
+:func:`server_state_sizes` accounts the snapshot's bytes, split into
+the model-sized part (params, velocity — independent of the fleet size
+K) and the per-client scalar part (pointers, GradIP scalars, pending
+uploads, sampler state) — the fleet-scale O(seeds + scalars) invariant:
+server state never grows as K x model (DESIGN.md §12).
 
 Mesh portability: arrays are gathered to host at save
 (``io._pack_leaf`` goes through ``jax.device_get``), and restore
@@ -20,12 +31,14 @@ changes values; DESIGN.md §9).
 """
 from __future__ import annotations
 
+import json
+
 import numpy as np
 
 from repro.checkpoint.io import (CheckpointError, load_manifest,
                                  save_pytree)
 
-STATE_VERSION = 1
+STATE_VERSION = 2  # v2: + sampler state & fleet config fields
 
 # conventional file names inside a --checkpoint-dir
 LATEST_NAME = "ckpt_latest.msgpack"
@@ -35,7 +48,8 @@ FINAL_NAME = "ckpt_final.msgpack"
 # they determine the seed ladder, the group programs and the protocol
 # accounting, so a mismatch silently breaks bit-exact replay.
 _CONFIG_FIELDS = ("seed", "local_steps", "n_dirs", "lr", "eps",
-                  "server_momentum")
+                  "server_momentum", "sample_frac", "sample_weighted",
+                  "quantize")
 
 
 def _keystr(*parts) -> str:
@@ -48,6 +62,11 @@ def _config_fingerprint(server) -> dict:
     cfg["n_clients"] = len(server.clients)
     cfg["space_n"] = int(server.space.n)
     cfg["high_freq"] = bool(server.high_freq)
+    # effective codec/sampler (catches constructor overrides that the
+    # FLConfig fields above would miss)
+    cfg["codec"] = getattr(server.codec, "spec", "none")
+    cfg["sampler_m"] = (None if server.sampler is None
+                        else int(server.sampler.m))
     return cfg
 
 
@@ -86,6 +105,10 @@ def save_server_state(path: str, server, extra_meta: dict | None = None
         "pending": pending_meta,
         "history": server.history,
         "config": _config_fingerprint(server),
+        # fleet-scale sampler: full bit-generator state, so a resumed
+        # server re-draws the killed round's cohort identically
+        "sampler": (None if server.sampler is None
+                    else server.sampler.state_dict()),
     }
     if extra_meta:
         meta["extra"] = extra_meta
@@ -146,6 +169,16 @@ def restore_server_state(path: str, server) -> dict:
     server.early_stopped = set(int(c) for c in meta["early_stopped"])
     server.history = list(meta.get("history", []))
 
+    samp = meta.get("sampler")
+    if (samp is None) != (server.sampler is None):
+        raise CheckpointError(
+            f"{path!r}: sampler mismatch: checkpoint "
+            f"{'has' if samp is not None else 'lacks'} sampler state but "
+            f"the target server "
+            f"{'lacks' if server.sampler is None else 'has'} a sampler")
+    if samp is not None:
+        server.sampler.load_state(samp)
+
     ptrs = meta["ptrs"]
     have = {str(c.cid) for c in server.clients}
     if set(ptrs) != have:
@@ -175,3 +208,39 @@ def restore_server_state(path: str, server) -> dict:
                             gip_idx=int(ent["gip_idx"]), gs=leaves[key]))
     server._pending = pending
     return meta
+
+
+def server_state_sizes(server) -> dict:
+    """Byte accounting of the checkpointed server state, split into the
+    **model-sized** part (params + optional velocity — independent of
+    the fleet size K) and the **per-client scalar** part (data pointers,
+    GradIP scalars, pending uploads, sampler state).  The fleet-scale
+    invariant (DESIGN.md §12): the per-client part holds a few scalars
+    per client — O(seeds + scalars) in K, never K x model — so serving a
+    4096-client fleet costs the server the same model footprint as an
+    8-client one."""
+    import jax
+    params = jax.device_get(server.params)
+    params_b = sum(np.asarray(x).nbytes
+                   for x in jax.tree_util.tree_leaves(params))
+    vel_b = (0 if server.velocity is None
+             else np.asarray(jax.device_get(server.velocity)).nbytes)
+    gradip_b = sum(np.asarray(e).nbytes
+                   for entries in server.gradip_log.values()
+                   for e in entries if e is not None)
+    pending_b = sum(np.asarray(p["gs"]).nbytes for p in server._pending)
+    ptr_b = 8 * len(server.clients)
+    sampler_b = (0 if server.sampler is None
+                 else len(json.dumps(server.sampler.state_dict())))
+    return dict(
+        n_clients=len(server.clients),
+        params_bytes=int(params_b),
+        velocity_bytes=int(vel_b),
+        model_state_bytes=int(params_b + vel_b),
+        gradip_bytes=int(gradip_b),
+        pending_bytes=int(pending_b),
+        ptr_bytes=int(ptr_b),
+        sampler_bytes=int(sampler_b),
+        per_client_state_bytes=int(gradip_b + pending_b + ptr_b
+                                   + sampler_b),
+    )

@@ -233,6 +233,15 @@ class FLConfig:
     # beyond-paper: FedAvgM-style server momentum on the aggregated sparse
     # update (0 = paper-faithful plain averaging)
     server_momentum: float = 0.0
+    # fleet-scale rounds (DESIGN.md §12)
+    # per-round participation fraction: < 1 enables the seeded
+    # ClientSampler (cohort size max(1, round(frac * K)))
+    sample_frac: float = 1.0
+    # weight cohort draws by client dataset size (uniform otherwise)
+    sample_weighted: bool = False
+    # uplink codec for the ZO scalars (core/quantize.py):
+    # none | int8 | int4 [-nearest for deterministic rounding]
+    quantize: str = "none"
 
 
 @dataclass(frozen=True)

@@ -33,11 +33,27 @@ from repro.core.dispatch import get_backing, resolve_backend
 from repro.kernels.ops import zo_dual_perturb_flat, zo_fused_update_flat
 
 
+def _masked_mean(g_clients, report_mask):
+    """Survivor/cohort mean of the per-client scalars: ``None`` (and an
+    all-ones mask) is the plain mean; a 0/1 mask excludes clients as a
+    *runtime operand* — one compiled program for every fault pattern and
+    every sampled cohort."""
+    if report_mask is None:
+        return jnp.mean(g_clients)
+    m = report_mask.astype(g_clients.dtype)
+    return jnp.sum(g_clients * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
 def make_fl_train_step(per_example_loss: Callable, space, *, eps: float,
                        lr: float, n_clients: int, constrain_params=None,
-                       backend: Optional[str] = None):
+                       backend: Optional[str] = None, quantize=None):
     """T=1 high-frequency MEERKAT step (Alg. 3). Returns jittable fn
     (params, key, batch) -> (params', g_clients [K], metrics).
+
+    ``quantize`` (:class:`repro.core.quantize.QuantSpec`) rounds each
+    client's scalar to the uplink wire grid before the collective — the
+    compiled-path form of the fleet uplink codec: the aggregated g is
+    the mean of exactly the values the server dequantizes.
 
     ``constrain_params`` re-applies the parameter sharding after each sparse
     scatter — the flat-index scatter otherwise erases GSPMD's weight
@@ -72,11 +88,9 @@ def make_fl_train_step(per_example_loss: Callable, space, *, eps: float,
             l_minus = per_example_loss(cp(backing.unflatten(wm)), batch)
         g_clients = (l_plus - l_minus).reshape(n_clients, -1).mean(-1) \
             / (2.0 * eps)
-        if report_mask is None:
-            g = jnp.mean(g_clients)                       # scalar collective
-        else:
-            m = report_mask.astype(g_clients.dtype)
-            g = jnp.sum(g_clients * m) / jnp.maximum(jnp.sum(m), 1.0)
+        if quantize is not None:
+            g_clients = quantize.apply(g_clients, key)
+        g = _masked_mean(g_clients, report_mask)          # scalar collective
         if be == "ref":
             new_params = cp(space.add(w_minus, (eps - lr * g) * z))
         else:
@@ -101,15 +115,22 @@ def make_fl_train_loop(per_example_loss: Callable, space, *, eps: float,
                        lr: float, n_clients: int, n_steps: int,
                        backend: Optional[str] = None,
                        stack_forwards: Optional[bool] = None,
-                       constrain_params=None):
+                       constrain_params=None, quantize=None):
     """``n_steps`` T=1 high-frequency MEERKAT steps in one jitted scan —
     the compiled training burst (the serving engine's decode-burst idea
     applied to the train loop: no host round-trip per step).
 
-    Returns jittable (params, key, batches) -> (params', g_clients
-    [n_steps, K], metrics), with batches carrying a leading [n_steps, ...]
-    axis.  Semantically identical to folding :func:`make_fl_train_step`
-    over the batches.
+    Returns jittable (params, key, batches[, report_masks]) -> (params',
+    g_clients [n_steps, K], metrics), with batches carrying a leading
+    [n_steps, ...] axis.  Semantically identical to folding
+    :func:`make_fl_train_step` over the batches.
+
+    The optional trailing ``report_masks`` ([n_steps, K] 0/1) is the
+    per-step survivor/cohort mask, a *runtime operand* scanned alongside
+    the batches: sampled cohorts and dropout patterns change per step
+    without recompiling.  ``quantize`` mirrors
+    :func:`make_fl_train_step`: per-client scalars are rounded to the
+    uplink wire grid (key folded per step) before the masked mean.
 
     On the fused route the flat parameter vector is built ONCE before the
     scan and carried dense across it — the per-step
@@ -133,29 +154,37 @@ def make_fl_train_loop(per_example_loss: Callable, space, *, eps: float,
     GSPMD-representable for sharded weights (DESIGN.md §perf/§9)."""
     cp = constrain_params or (lambda p: p)
 
-    def loop(params, key, batches):
+    def loop(params, key, batches, report_masks=None):
         backing = get_backing(space, params)
         keys = jax.random.split(key, n_steps)
+        xs = ((keys, batches) if report_masks is None
+              else (keys, batches, report_masks))
 
-        def g_of(l_plus, l_minus):
-            return (l_plus - l_minus).reshape(n_clients, -1).mean(-1) \
+        def unpack(inp):
+            return inp if report_masks is not None else (*inp, None)
+
+        def g_of(l_plus, l_minus, k):
+            g_cl = (l_plus - l_minus).reshape(n_clients, -1).mean(-1) \
                 / (2.0 * eps)
+            if quantize is not None:
+                g_cl = quantize.apply(g_cl, k)
+            return g_cl
 
         if resolve_backend(backend, backing,
                            sharded=constrain_params is not None) == "ref":
             def one(p, inp):
-                k, b = inp
+                k, b, mask = unpack(inp)
                 z = space.sample_z(k)
                 w_plus = cp(space.add(p, eps * z))
                 l_plus = per_example_loss(w_plus, b)
                 w_minus = cp(space.add(w_plus, (-2.0 * eps) * z))
                 l_minus = per_example_loss(w_minus, b)
-                g_cl = g_of(l_plus, l_minus)
-                g = jnp.mean(g_cl)
+                g_cl = g_of(l_plus, l_minus, k)
+                g = _masked_mean(g_cl, mask)
                 new_p = cp(space.add(w_minus, (eps - lr * g) * z))
                 return new_p, (g_cl, (l_plus + l_minus).mean() / 2.0)
 
-            p_T, (gs, losses) = jax.lax.scan(one, params, (keys, batches))
+            p_T, (gs, losses) = jax.lax.scan(one, params, xs)
             return p_T, gs, {"loss": losses[-1], "g": gs[-1].mean()}
 
         w0 = backing.flatten(params)  # hoisted: once per burst, not per step
@@ -168,7 +197,7 @@ def make_fl_train_loop(per_example_loss: Callable, space, *, eps: float,
 
         def one(carry, inp):
             w_flat, z_buf = carry
-            k, b = inp
+            k, b, mask = unpack(inp)
             z_flat = backing.scatter_into(z_buf, space.sample_z(k))
             wp, wm = zo_dual_perturb_flat(w_flat, z_flat, None, eps)
             if stack:
@@ -183,12 +212,12 @@ def make_fl_train_loop(per_example_loss: Callable, space, *, eps: float,
             else:
                 l_plus = per_example_loss(cp(backing.unflatten(wp)), b)
                 l_minus = per_example_loss(cp(backing.unflatten(wm)), b)
-            g_cl = g_of(l_plus, l_minus)
-            g = jnp.mean(g_cl)
+            g_cl = g_of(l_plus, l_minus, k)
+            g = _masked_mean(g_cl, mask)
             new_w = zo_fused_update_flat(w_flat, z_flat, None, -lr * g)
             return (new_w, z_flat), (g_cl, (l_plus + l_minus).mean() / 2.0)
 
-        (w_T, _), (gs, losses) = jax.lax.scan(one, (w0, z0), (keys, batches))
+        (w_T, _), (gs, losses) = jax.lax.scan(one, (w0, z0), xs)
         return (cp(backing.unflatten(w_T)), gs,
                 {"loss": losses[-1], "g": gs[-1].mean()})
 

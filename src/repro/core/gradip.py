@@ -24,6 +24,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _resolve_gradip_backend(backend: Optional[str], gp_vec) -> str:
@@ -90,6 +91,37 @@ def gradip_trajectory(space, keys, gs, gp_vec,
 
     ips, norms, coss = jax.vmap(one)(keys, gs)
     return ips, norms, coss
+
+
+def gradip_matrix(entries, T: Optional[int] = None):
+    """Stack one client's per-round GradIP log into a dense matrix with
+    explicit gaps.
+
+    ``entries`` is ``FederatedZO.gradip_log[cid]`` — one [T_r] array per
+    round the client reported, ``None`` for rounds it was dropped,
+    straggling (until arrival), or **unsampled** (fleet-scale client
+    sampling logs a gap for every client outside the round's cohort, so
+    trajectory analyses see the participation structure instead of a
+    silently shortened log).
+
+    Returns ``(mat [R, T] f32, present [R] bool)``: gap rounds are NaN
+    rows; shorter entries (e.g. an early-stopped client's T=1 rounds)
+    are NaN-padded on the right.  ``T`` defaults to the longest present
+    entry and must be given when the log is all gaps."""
+    entries = list(entries)
+    present = np.array([e is not None for e in entries], bool)
+    lens = [int(np.asarray(e).reshape(-1).shape[0])
+            for e in entries if e is not None]
+    if T is None:
+        if not lens:
+            raise ValueError("gradip_matrix: all-gap log needs explicit T")
+        T = max(lens)
+    mat = np.full((len(entries), int(T)), np.nan, np.float32)
+    for i, e in enumerate(entries):
+        if e is not None:
+            row = np.asarray(e, np.float32).reshape(-1)
+            mat[i, :row.shape[0]] = row
+    return mat, present
 
 
 def pretrain_gradient_vec(loss_fn, params, space, batches):

@@ -1,0 +1,265 @@
+"""Quantized uplink for the ZO projected-gradient scalars (DESIGN.md §12).
+
+The fleet-scale uplink compresses each client's [T] (or [T, K]) scalar
+upload to ``bits``-bit integer codes plus one shared exponent per chunk.
+Scales are **powers of two** chosen per chunk:
+
+    e = min integer with  qmax * 2^e >= max|x|,   qmax = 2^(bits-1) - 1
+    code = round(x * 2^-e)  (stochastic or nearest), clipped to [-qmax, qmax]
+    x_hat = code * 2^e
+
+Power-of-two scales make every op in the pipeline *exact* in f32
+(``ldexp`` only shifts the exponent), which buys two invariants the
+virtual-path replay needs:
+
+* **Idempotence** — ``decode(encode(x_hat))`` is bit-identical to
+  ``x_hat`` for any already-on-grid ``x_hat``: its re-encoded exponent
+  ``e'`` is <= ``e`` (the grid only refines), the rescaled codes are
+  integers with no fractional part, and both rounding modes pass
+  integers through unchanged.  So the server's deterministic (nearest)
+  re-encode of a client's applied value reproduces the client's value
+  exactly — the **exact-replay invariant**: the virtual path is
+  bit-reconstructible from the compressed wire payload alone.
+* **Error bound** — the grid spacing ``2^e`` satisfies
+  ``2^e <= 2 * max|x| / qmax`` (minimality of ``e``), so the roundtrip
+  error is at most one grid step (half a step for nearest rounding).
+
+Stochastic rounding (``floor(q) + Bernoulli(frac(q))``) keeps the
+quantizer *unbiased* — ``E[x_hat] = x`` — so the aggregated mean over a
+cohort converges to the unquantized mean.  The client-side jax
+roundtrip draws its Bernoulli noise from the step key folded with
+:data:`QUANT_FOLD`, a stream disjoint from z sampling — pure function
+of ``(fl.seed, round, step)``, so quantized runs resume bit-exactly.
+
+The jax in-loop path (:func:`quantize_roundtrip`,
+:class:`QuantSpec.apply`) is per-scalar (chunk=1): the local T-step scan
+applies each quantized g_t before computing g_{t+1}, so no cross-step
+chunk is possible.  The host :class:`IntCodec` supports ``chunk > 1``
+for batch payloads and property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+# largest integer code magnitude per bit width (symmetric signed grid)
+QMAX = {4: 7, 8: 127}
+# f32 exponent clip — keeps every ldexp finite and exact
+E_MIN, E_MAX = -127, 127
+# salt folded into the per-step/per-direction PRNG key for the rounding
+# draw (disjoint from the z-sampling stream derived from the same key)
+QUANT_FOLD = 0x51AD
+
+
+def pow2_exponent(amax: np.ndarray, bits: int) -> np.ndarray:
+    """Smallest ``e`` (int32, clipped to [E_MIN, E_MAX]) with
+    ``qmax * 2^e >= amax``, computed with exact f32 ops (frexp/ldexp)
+    so host numpy and jax agree bit-for-bit."""
+    qmax = np.float32(QMAX[bits])
+    amax = np.asarray(amax, np.float32)
+    _, e_frexp = np.frexp(amax)
+    e0 = e_frexp.astype(np.int32) - (bits - 1)
+    e = np.where(np.ldexp(qmax, e0) >= amax, e0, e0 + 1)
+    return np.clip(e, E_MIN, E_MAX).astype(np.int32)
+
+
+def wire_nbytes(n: int, bits: int, chunk: int = 1) -> int:
+    """Serialized size of an n-scalar payload: packed codes (two int4
+    codes per byte) + one exponent byte per chunk."""
+    return (n * bits + 7) // 8 + math.ceil(n / chunk)
+
+
+def pack_codes(codes: np.ndarray, bits: int) -> bytes:
+    """Serialize int codes: int8 verbatim; int4 as offset nibble pairs."""
+    codes = np.asarray(codes, np.int8).ravel()
+    if bits == 8:
+        return codes.tobytes()
+    u = (codes.astype(np.int16) + 8).astype(np.uint8)  # [-7, 7] -> [1, 15]
+    if u.size % 2:
+        u = np.concatenate([u, np.zeros((1,), np.uint8)])
+    return (u[0::2] | (u[1::2] << 4)).tobytes()
+
+
+def unpack_codes(raw: bytes, bits: int, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_codes` — int8 [n] codes."""
+    if bits == 8:
+        return np.frombuffer(raw, np.int8, count=n).copy()
+    b = np.frombuffer(raw, np.uint8)
+    u = np.stack([b & 0x0F, b >> 4], axis=1).ravel()[:n]
+    return (u.astype(np.int16) - 8).astype(np.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class Wire:
+    """One encoded payload: integer codes + per-chunk pow2 exponents."""
+    codes: np.ndarray  # int8 [n], in [-qmax, qmax]
+    exps: np.ndarray   # int8 [ceil(n / chunk)]
+    shape: tuple
+    bits: int
+    chunk: int
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def nbytes(self) -> int:
+        return wire_nbytes(self.n, self.bits, self.chunk)
+
+    def tobytes(self) -> bytes:
+        return pack_codes(self.codes, self.bits) + \
+            np.asarray(self.exps, np.int8).tobytes()
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatWire:
+    """Identity-codec payload: raw f32 scalars (4 bytes each)."""
+    values: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        return 4 * self.values.size
+
+    def tobytes(self) -> bytes:
+        return np.asarray(self.values, np.float32).tobytes()
+
+
+def encode(x, bits: int, chunk: int = 1,
+           rng: Optional[np.random.Generator] = None) -> Wire:
+    """Host-side encode.  ``rng=None`` rounds to nearest (deterministic —
+    what the server uses, exact on on-grid inputs); an ``rng`` draws the
+    stochastic rounding noise."""
+    x = np.asarray(x, np.float32)
+    flat = x.ravel()
+    n = flat.size
+    n_chunks = math.ceil(n / chunk) if n else 0
+    pad = n_chunks * chunk - n
+    g = np.concatenate([flat, np.zeros((pad,), np.float32)])
+    g = g.reshape(n_chunks, chunk)
+    amax = np.abs(g).max(axis=1)
+    e = pow2_exponent(amax, bits)
+    q = np.ldexp(g, -e[:, None])  # exact: |q| <= qmax by choice of e
+    if rng is None:
+        qr = np.rint(q)
+    else:
+        lo = np.floor(q)
+        qr = lo + (rng.random(q.shape) < (q - lo))
+    qr = np.clip(qr, -QMAX[bits], QMAX[bits])
+    return Wire(codes=qr.astype(np.int8).ravel()[:n],
+                exps=e.astype(np.int8), shape=x.shape, bits=bits,
+                chunk=chunk)
+
+
+def decode(wire: Wire) -> np.ndarray:
+    """Exact dequantize: ``code * 2^e`` per chunk, f32 [*wire.shape]."""
+    n_chunks = wire.exps.size
+    pad = n_chunks * wire.chunk - wire.n
+    c = np.concatenate([wire.codes.astype(np.float32),
+                        np.zeros((pad,), np.float32)])
+    out = np.ldexp(c.reshape(n_chunks, wire.chunk),
+                   wire.exps.astype(np.int32)[:, None])
+    return out.ravel()[:wire.n].reshape(wire.shape).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """The client-side in-loop quantization recipe (jax route)."""
+    bits: int
+    stochastic: bool = True
+
+    def apply(self, g, key):
+        import jax
+        return quantize_roundtrip(g, jax.random.fold_in(key, QUANT_FOLD),
+                                  self.bits, self.stochastic)
+
+
+def quantize_roundtrip(g, key, bits: int, stochastic: bool = True):
+    """Jax-traceable per-scalar quantize + dequantize (chunk=1) — the
+    value the client *applies* in its local update, and (being on-grid)
+    the value the server's nearest re-encode reproduces bit-exactly.
+    Same frexp/ldexp arithmetic as the host codec, so the nearest mode
+    bit-matches :func:`encode`/:func:`decode` with ``chunk=1``."""
+    import jax
+    import jax.numpy as jnp
+    g = jnp.asarray(g, jnp.float32)
+    qmax = jnp.float32(QMAX[bits])
+    amax = jnp.abs(g)
+    _, e_frexp = jnp.frexp(amax)
+    e0 = e_frexp.astype(jnp.int32) - (bits - 1)
+    e = jnp.where(jnp.ldexp(qmax, e0) >= amax, e0, e0 + 1)
+    e = jnp.clip(e, E_MIN, E_MAX)
+    q = jnp.ldexp(g, -e)
+    if stochastic:
+        lo = jnp.floor(q)
+        u = jax.random.uniform(key, q.shape, jnp.float32)
+        qr = lo + (u < (q - lo)).astype(jnp.float32)
+    else:
+        qr = jnp.round(q)  # half-to-even, matching np.rint
+    return jnp.ldexp(jnp.clip(qr, -qmax, qmax), e)
+
+
+class IdentityCodec:
+    """Pass-through codec: raw f32 scalars, 4 bytes each — today's dense
+    protocol, and the bit-parity baseline for the quantized path."""
+    spec = "none"
+    bits = 32
+    chunk = 1
+
+    def encode(self, x, rng=None) -> FloatWire:
+        return FloatWire(values=np.asarray(x, np.float32))
+
+    def decode(self, wire: FloatWire) -> np.ndarray:
+        return np.asarray(wire.values, np.float32)
+
+    def nbytes(self, n: int) -> int:
+        return 4 * int(n)
+
+    def jax_spec(self) -> None:
+        return None  # no in-loop quantization: trace today's program
+
+
+class IntCodec:
+    """Stochastic-rounding int8/int4 codec with per-chunk pow2 scales."""
+
+    def __init__(self, bits: int, chunk: int = 1, stochastic: bool = True):
+        if bits not in QMAX:
+            raise ValueError(f"bits must be one of {sorted(QMAX)}, "
+                             f"got {bits}")
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.bits = int(bits)
+        self.chunk = int(chunk)
+        self.stochastic = bool(stochastic)
+
+    @property
+    def spec(self) -> str:
+        return f"int{self.bits}" + ("" if self.stochastic else "-nearest")
+
+    def encode(self, x, rng: Optional[np.random.Generator] = None) -> Wire:
+        return encode(x, self.bits, self.chunk, rng)
+
+    def decode(self, wire: Wire) -> np.ndarray:
+        return decode(wire)
+
+    def nbytes(self, n: int) -> int:
+        return wire_nbytes(int(n), self.bits, self.chunk)
+
+    def jax_spec(self) -> QuantSpec:
+        return QuantSpec(bits=self.bits, stochastic=self.stochastic)
+
+
+def make_codec(spec: str):
+    """Codec from a config string: ``none`` | ``int8`` | ``int4`` (+
+    ``-nearest`` suffix for deterministic rounding)."""
+    if spec in (None, "", "none"):
+        return IdentityCodec()
+    m = spec.removesuffix("-nearest")
+    if m in ("int4", "int8"):
+        return IntCodec(bits=int(m[3:]), stochastic=not
+                        spec.endswith("-nearest"))
+    raise ValueError(
+        f"unknown quantize spec {spec!r}: want none|int8|int4"
+        f"[-nearest]")

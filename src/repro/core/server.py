@@ -25,6 +25,16 @@ staleness, seed-replayed exactly at arrival), and
 server state for bit-exact resume after a kill — including across mesh
 shapes.  Deterministic fault schedules come from
 ``repro.fault.FaultPlan``.
+
+**Fleet scale** (DESIGN.md §12): with ``fl.sample_frac < 1`` each round
+runs a seeded fixed-size cohort (``core/sampling.ClientSampler``; fault
+events restrict to the sampled cohort, unsampled clients get explicit
+GradIP gaps), and ``fl.quantize`` routes the scalar uplink through the
+``core/quantize`` codec — clients apply the wire-grid values in-loop
+(exact replay), so the server reconstructs virtual paths from the
+*dequantized* upload bit-exactly.  Server state stays O(seeds + scalars)
+in the fleet size K: parameters + per-client scalars only, never
+K x model (``checkpoint/state.server_state_sizes`` accounts it).
 """
 from __future__ import annotations
 
@@ -41,6 +51,8 @@ from repro.core import virtual_path as VP
 from repro.core import vpcs as VPCS
 from repro.core import zo as ZO
 from repro.core.gradip import gradip_trajectory
+from repro.core.quantize import make_codec
+from repro.core.sampling import ClientSampler
 
 
 class Client:
@@ -106,6 +118,13 @@ class FederatedZO:
       high_freq: force Alg. 3 downlink accounting; default T==1.
       plan: optional :class:`repro.sharding.fl.FLShardPlan` — run every
         client group sharded on the plan's mesh (see module docstring).
+      sampler: optional :class:`repro.core.sampling.ClientSampler`
+        override; by default one is built from ``fl.sample_frac < 1``
+        (seeded with ``fl.seed``, weighted by client data size when
+        ``fl.sample_weighted``).  ``None`` with ``sample_frac == 1``
+        runs the whole fleet every round (today's dense protocol).
+      codec: optional uplink codec override (``core/quantize.py``); by
+        default built from ``fl.quantize`` (``"none"`` = raw f32).
 
     The vmapped client loops dispatch through ``fl.zo_backend``
     ("auto" routes the per-step perturb/update through the fused flat
@@ -115,7 +134,8 @@ class FederatedZO:
 
     def __init__(self, loss_fn: Callable, params, space, fl: FLConfig,
                  clients: Sequence[Client], eval_fn: Optional[Callable] = None,
-                 high_freq: Optional[bool] = None, plan=None):
+                 high_freq: Optional[bool] = None, plan=None, sampler=None,
+                 codec=None):
         self.loss_fn = loss_fn
         self.space = space
         self.fl = fl
@@ -125,6 +145,17 @@ class FederatedZO:
         self.clients = list(clients)
         self.eval_fn = eval_fn
         self.high_freq = fl.local_steps == 1 if high_freq is None else high_freq
+        self.codec = codec if codec is not None else make_codec(
+            getattr(fl, "quantize", "none"))
+        if sampler is None:
+            frac = float(getattr(fl, "sample_frac", 1.0))
+            if frac < 1.0:
+                weights = ([c.n for c in self.clients]
+                           if getattr(fl, "sample_weighted", False) else None)
+                sampler = ClientSampler([c.cid for c in self.clients],
+                                        frac=frac, weights=weights,
+                                        seed=fl.seed)
+        self.sampler = sampler
         self.comm = CommLog()
         self.round = 0
         self.history: List[Dict[str, Any]] = []
@@ -165,7 +196,8 @@ class FederatedZO:
                                     n_dirs=getattr(self.fl, "n_dirs", 1),
                                     backend=self.backend,
                                     n_carries=n_group,
-                                    sharded=self.plan is not None)
+                                    sharded=self.plan is not None,
+                                    quantize=self.codec.jax_spec())
 
             def group(params, keys, batches):
                 zeros = jnp.zeros((self.space.n,), jnp.float32)
@@ -188,6 +220,15 @@ class FederatedZO:
 
     def _client_T(self, cid: int) -> int:
         return 1 if cid in self.early_stopped else self.fl.local_steps
+
+    def _cohort(self, r: int) -> tuple:
+        """Participating client ids for round ``r``: the whole fleet
+        without a sampler, else the sampler's seeded draw — sorted and
+        of fixed size, so every round reuses one compiled group program
+        (the cohort is data, not shape)."""
+        if self.sampler is None:
+            return tuple(c.cid for c in self.clients)
+        return self.sampler.cohort(r)
 
     @staticmethod
     def _stack(batch_list):
@@ -229,6 +270,17 @@ class FederatedZO:
           before the update applies): the preemption the checkpoint/
           resume path recovers from.
 
+        With a sampler (``fl.sample_frac < 1``) only the round's seeded
+        cohort participates: fault events restrict to the cohort
+        (``RoundFaults.restrict``), unsampled clients run nothing, move
+        no bytes, keep their data pointers, and get an explicit ``None``
+        GradIP gap.  Every upload crosses the wire through
+        ``self.codec``: the server bills the *encoded* byte count and
+        stores/replays the *decoded* scalars — bit-identical to what the
+        client applied locally (exact-replay quantization in
+        ``core/zo.py``), so the virtual path stays reconstructible from
+        the compressed uplink.
+
         The round aggregates over whoever actually reported — prompt
         survivors plus stragglers landing this round — via the
         survivor-count-aware :func:`VP.aggregate`; a zero-reporter round
@@ -237,15 +289,24 @@ class FederatedZO:
         from repro.fault.plan import NO_FAULTS
         f = faults if faults is not None else NO_FAULTS
         r = self.round
+        cohort = self._cohort(r)
+        in_cohort = set(cohort)
+        f = f.restrict(in_cohort)
+        if gp_vec is not None:
+            for c in self.clients:
+                if c.cid not in in_cohort:
+                    self.gradip_log[c.cid].append(None)  # unsampled gap
         groups: Dict[int, List[Client]] = {}
         for c in self.clients:
-            groups.setdefault(self._client_T(c.cid), []).append(c)
-        # deterministic grouping: sorted-T iteration below, and each client
-        # in exactly one group — resume replay and the mesh-parity harness
-        # must never depend on dict insertion order or see a client twice
+            if c.cid in in_cohort:
+                groups.setdefault(self._client_T(c.cid), []).append(c)
+        # deterministic grouping: sorted-T iteration below, and each cohort
+        # client in exactly one group — resume replay and the mesh-parity
+        # harness must never depend on dict insertion order or see a
+        # client twice
         cids = [c.cid for cs in groups.values() for c in cs]
-        assert len(cids) == len(self.clients) == len(set(cids)), \
-            "each client must appear in exactly one T-group"
+        assert len(cids) == len(in_cohort) == len(set(cids)), \
+            "each cohort client must appear in exactly one T-group"
         deltas, gs_by_cid, arrived = [], {}, []
         for T in sorted(groups):
             if gp_vec is not None:
@@ -265,7 +326,13 @@ class FederatedZO:
             #     (seed list, scalars) — no data, no dense vectors.  The
             #     scalars are gathered to host first so replay/aggregation
             #     run identically under any mesh shape (DESIGN.md §9).
-            gs = np.asarray(gs)
+            # uplink: every scalar block crosses the wire through the
+            # codec; the *decoded* values are what the server stores,
+            # bills and replays (identical to the client's applied
+            # values — exact-replay quantization), and the billed bytes
+            # are the encoded wire size
+            wires = [self.codec.encode(g) for g in np.asarray(gs)]
+            gs = np.stack([self.codec.decode(w) for w in wires])
             prompt = [i for i, c in enumerate(cs) if c.cid not in f.late]
             if prompt:
                 deltas.append(np.asarray(self._recon(
@@ -285,9 +352,9 @@ class FederatedZO:
                         src_round=r, gip_idx=gip_idx, gs=g))
                     continue
                 gs_by_cid[c.cid] = g
-                # upload = every projected-gradient scalar: T with n_dirs=1,
-                # T*K for the multi-direction estimator ([T, K] gs)
-                self.comm.add(up=4 * g.size, down=self._down_bytes(T))
+                # upload = every projected-gradient scalar block (T with
+                # n_dirs=1, T*K multi-direction) at the codec's wire size
+                self.comm.add(up=wires[i].nbytes, down=self._down_bytes(T))
                 if gp_vec is not None:
                     ips, _, _ = gradip_trajectory(self.space, keys,
                                                   jnp.asarray(_per_step(g)),
@@ -306,7 +373,7 @@ class FederatedZO:
                                     gs_l.shape[0])
             deltas.append(np.asarray(self._recon(src_keys,
                                                  jnp.asarray(gs_l[None]))))
-            self.comm.add(up=4 * gs_l.size, down=0)
+            self.comm.add(up=self.codec.nbytes(gs_l.size), down=0)
             if gp_vec is not None and p["gip_idx"] >= 0:
                 ips, _, _ = gradip_trajectory(self.space, src_keys,
                                               jnp.asarray(_per_step(gs_l)),
@@ -337,7 +404,8 @@ class FederatedZO:
         self.last_round_info = dict(
             round=r, n_reporting=n_report, drops=sorted(f.drops),
             late=dict(f.late), arrived=arrived,
-            pending=len(self._pending))
+            pending=len(self._pending), cohort=list(cohort),
+            n_unsampled=len(self.clients) - len(cohort))
         return gs_by_cid
 
     def _down_bytes(self, T: int) -> int:

@@ -33,6 +33,22 @@ def reconstruct_delta(space, keys, gs, lr: float, delta0=None):
     return delta_T
 
 
+def reconstruct_from_wire(space, keys, wire, codec, lr: float, delta0=None):
+    """Replay a client's local trajectory directly from its **encoded
+    uplink payload** — the fleet-scale server's entire per-client
+    knowledge is (seed keys, wire bytes).
+
+    In exact-replay mode (``core/quantize.py``: the client applies the
+    wire-grid value at every local step, and on-grid values survive the
+    codec bit-for-bit) ``codec.decode(wire)`` returns exactly the
+    scalars the client's trajectory used, so this reconstruction is
+    bit-identical to the client-side path even though only quantized
+    bytes crossed the network."""
+    return reconstruct_delta(space, keys,
+                             jnp.asarray(codec.decode(wire), jnp.float32),
+                             lr, delta0)
+
+
 def reconstruct_grad_vecs(space, keys, gs):
     """The reconstructed ZO gradient vectors grad_hat_t = g_t * z_t.
 

@@ -30,6 +30,19 @@ from repro.core.dispatch import get_backing, resolve_backend
 from repro.kernels.ops import zo_dual_perturb_flat, zo_fused_update_flat
 
 
+def _maybe_quantize(g, key, quantize):
+    """Exact-replay quantization hook (core/quantize.py): the client
+    rounds each projected-gradient scalar to the wire grid *before*
+    applying it, so the value it uploads (and the server dequantizes) is
+    bit-identical to the value its local trajectory used.  The rounding
+    noise key is the step/direction key folded with QUANT_FOLD — a
+    stream disjoint from z sampling, derivable from the seed ladder.
+    Identical in the ref and flat-kernel routes (backend bit-parity)."""
+    if quantize is None:
+        return g
+    return quantize.apply(g, key)
+
+
 def _dual_losses(loss_fn, backing, base_flat, z_flat, eps, batch):
     """Fused perturb + the two loss evaluations; returns (l+, l-).
 
@@ -41,7 +54,7 @@ def _dual_losses(loss_fn, backing, base_flat, z_flat, eps, batch):
 
 
 def _multi_dir_update(loss_fn, backing, space, base_flat, key, eps: float,
-                      n_dirs: int, batch):
+                      n_dirs: int, batch, quantize=None):
     """K-direction fused estimator at ``base_flat``: splits the step key
     into K direction keys (matching ``reconstruct_delta``'s [T, K] replay)
     and returns (mean_k g_k * z_k as a dense flat vector, gs [K]).
@@ -53,7 +66,7 @@ def _multi_dir_update(loss_fn, backing, space, base_flat, key, eps: float,
         z_flat = backing.expand(space.sample_z(k))
         lp, lm = _dual_losses(loss_fn, backing, base_flat, z_flat, eps,
                               batch)
-        g = (lp - lm) / (2.0 * eps)
+        g = _maybe_quantize((lp - lm) / (2.0 * eps), k, quantize)
         return acc + g * z_flat, g
 
     upd_sum, gs = jax.lax.scan(one, jnp.zeros((backing.n_pad,), jnp.float32),
@@ -82,7 +95,8 @@ def projected_gradient(loss_fn: Callable, params, space, delta, z, eps: float,
 
 def local_step(loss_fn: Callable, params, space, delta, key, eps: float,
                lr: float, batch, n_dirs: int = 1,
-               backend: Optional[str] = None, sharded: bool = False):
+               backend: Optional[str] = None, sharded: bool = False,
+               quantize=None):
     """One client-side ZO step on the sparse delta. Returns (delta', g).
 
     ``n_dirs > 1`` (beyond-paper) averages the estimator over K independent
@@ -90,37 +104,43 @@ def local_step(loss_fn: Callable, params, space, delta, key, eps: float,
     variance (Lemma B.7) while the upload grows only to K scalars per
     step; the virtual path stays reconstructible because the K direction
     keys derive from the shared step key (``reconstruct_delta`` accepts
-    gs of shape [T, K]).  n_dirs=1 is exactly the paper's Eq. 1 step."""
+    gs of shape [T, K]).  n_dirs=1 is exactly the paper's Eq. 1 step.
+
+    ``quantize`` (a :class:`repro.core.quantize.QuantSpec`) rounds each
+    g to the uplink wire grid before the update — exact-replay mode: the
+    applied scalar equals the dequantized upload bit-for-bit."""
     backing = get_backing(space, params)
     if resolve_backend(backend, backing, sharded=sharded) == "ref":
         return _local_step_ref(loss_fn, params, space, delta, key, eps, lr,
-                               batch, n_dirs)
+                               batch, n_dirs, quantize)
 
     base = backing.flatten(params) + backing.expand(delta)
     if n_dirs == 1:
         z = space.sample_z(key)
         lp, lm = _dual_losses(loss_fn, backing, base, backing.expand(z), eps,
                               batch)
-        g = (lp - lm) / (2.0 * eps)
+        g = _maybe_quantize((lp - lm) / (2.0 * eps), key, quantize)
         return delta - lr * g * z, g
 
     upd, gs = _multi_dir_update(loss_fn, backing, space, base, key, eps,
-                                n_dirs, batch)
+                                n_dirs, batch, quantize)
     return delta - lr * backing.restrict(upd), gs
 
 
 def _local_step_ref(loss_fn, params, space, delta, key, eps, lr, batch,
-                    n_dirs):
+                    n_dirs, quantize=None):
     if n_dirs == 1:
         z = space.sample_z(key)
         g = projected_gradient(loss_fn, params, space, delta, z, eps, batch,
                                backend="ref")
+        g = _maybe_quantize(g, key, quantize)
         return delta - lr * g * z, g
 
     def one(k):
         z = space.sample_z(k)
         g = projected_gradient(loss_fn, params, space, delta, z, eps, batch,
                                backend="ref")
+        g = _maybe_quantize(g, k, quantize)
         return g * z, g
 
     keys = jax.random.split(key, n_dirs)
@@ -130,7 +150,8 @@ def _local_step_ref(loss_fn, params, space, delta, key, eps, lr, batch,
 
 def make_local_run(loss_fn: Callable, space, eps: float, lr: float,
                    n_dirs: int = 1, backend: Optional[str] = None,
-                   n_carries: int = 1, sharded: bool = False):
+                   n_carries: int = 1, sharded: bool = False,
+                   quantize=None):
     """Jittable T-step client loop.
 
     batches: pytree with leading [T, ...]; keys: [T] PRNG keys.
@@ -140,6 +161,10 @@ def make_local_run(loss_fn: Callable, space, eps: float, lr: float,
     ``sharded=True`` (the mesh route of ``FederatedZO``) forces
     ``backend="auto"`` onto the pytree route, whose N-D scatters keep the
     weight leaves sharded (DESIGN.md §9).
+    ``quantize`` (:class:`repro.core.quantize.QuantSpec`) turns on
+    exact-replay uplink quantization: each step's g is rounded to the
+    wire grid before it is applied *and* before it is returned, so the
+    trajectory is bit-reconstructible from the quantized upload.
 
     On the pallas backend the flat parameter vector is built ONCE outside
     the scan and the scan carries the *dense* flat delta, so every local
@@ -153,7 +178,8 @@ def make_local_run(loss_fn: Callable, space, eps: float, lr: float,
             def step(delta, inp):
                 key, batch = inp
                 delta, g = _local_step_ref(loss_fn, params, space, delta,
-                                           key, eps, lr, batch, n_dirs)
+                                           key, eps, lr, batch, n_dirs,
+                                           quantize)
                 return delta, g
 
             return jax.lax.scan(step, delta0, (keys, batches))
@@ -172,11 +198,11 @@ def make_local_run(loss_fn: Callable, space, eps: float, lr: float,
                 z_flat = backing.scatter_into(z_buf, space.sample_z(key))
                 lp, lm = _dual_losses(loss_fn, backing, base, z_flat, eps,
                                       batch)
-                g = (lp - lm) / (2.0 * eps)
+                g = _maybe_quantize((lp - lm) / (2.0 * eps), key, quantize)
                 return (zo_fused_update_flat(delta_dense, z_flat, None,
                                              -lr * g), z_flat), g
             upd, gs = _multi_dir_update(loss_fn, backing, space, base, key,
-                                        eps, n_dirs, batch)
+                                        eps, n_dirs, batch, quantize)
             return (zo_fused_update_flat(delta_dense, upd, None, -lr),
                     z_buf), gs
 

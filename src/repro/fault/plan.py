@@ -53,6 +53,23 @@ class RoundFaults:
     def empty(self) -> bool:
         return not (self.drops or self.late or self.kill)
 
+    def restrict(self, cohort) -> "RoundFaults":
+        """Project the round's client faults onto a sampled cohort
+        (fleet-scale client sampling, DESIGN.md §12): drop/late events
+        of clients outside the cohort are vacuous — the server never
+        asked them to participate — so the effective faults are the
+        plan's events intersected with the cohort.  ``kill`` is a
+        server-side event and survives unchanged.  A fault plan drawn
+        for the full fleet therefore composes with any participation
+        fraction without redrawing the schedule."""
+        if not (self.drops or self.late):
+            return self
+        cohort = frozenset(cohort)
+        return RoundFaults(
+            drops=self.drops & cohort,
+            late={c: d for c, d in self.late.items() if c in cohort},
+            kill=self.kill)
+
 
 NO_FAULTS = RoundFaults()
 

@@ -150,6 +150,18 @@ def main():
     ap.add_argument("--kill-at-round", type=int, default=None,
                     help="SIGKILL this process mid-round r (fault-injection "
                          "harness; see tools/kill_recover.py)")
+    ap.add_argument("--sample-frac", type=float, default=1.0,
+                    help="per-round participation fraction; < 1 enables the "
+                         "seeded ClientSampler (cohort size "
+                         "max(1, round(frac*K)); DESIGN.md §12)")
+    ap.add_argument("--sample-weighted", action="store_true",
+                    help="weight cohort draws by client dataset size "
+                         "(uniform otherwise)")
+    ap.add_argument("--quantize", default="none",
+                    choices=["none", "int8", "int4", "int8-nearest",
+                             "int4-nearest"],
+                    help="uplink codec for the ZO scalars "
+                         "(core/quantize.py exact-replay quantizer)")
     a = ap.parse_args()
 
     cfg = TINY if a.arch == "tiny" else get_config(a.arch).reduced()
@@ -198,9 +210,16 @@ def main():
                   zo_backend=a.zo_backend,
                   batch_size=a.batch, vp_calibration_steps=100,
                   vp_init_steps=20, vp_later_steps=20, vp_rho_later=2.0,
-                  vp_sigma=0.25, vp_sigma_relative=True)
+                  vp_sigma=0.25, vp_sigma_relative=True,
+                  sample_frac=a.sample_frac,
+                  sample_weighted=a.sample_weighted, quantize=a.quantize)
     server = FederatedZO(loss, params, space, fl, clients, eval_fn=evaluate,
                          plan=plan)
+    if server.sampler is not None or server.codec.spec != "none":
+        m = "full" if server.sampler is None else server.sampler.m
+        print(f"fleet: cohort {m}/{a.clients} per round"
+              + (" (weighted)" if a.sample_weighted else "")
+              + f", uplink codec {server.codec.spec}")
 
     fault_plan = None
     if a.drop_rate or a.late_rate or a.kill_at_round is not None:

@@ -72,6 +72,11 @@ class FLShardPlan:
     def batch_axes(self):
         """Mesh axes acting as the FL-client/data axis.
 
+        Under fleet-scale client sampling (DESIGN.md §12) this axis
+        spans the round's **sampled cohort** (``m`` clients), not the
+        full fleet ``K`` — divisibility and shard widths are governed by
+        the cohort size the server actually runs per round.
+
         ``"fsdp"`` / ``"replicate"`` run no tensor parallelism, so *every*
         mesh axis is a data shard (the dry-run's ``zo_dp`` layout;
         rules.py docstring) — this is also what keeps the round bit-exact:

@@ -1,0 +1,254 @@
+"""The uplink quantizer (core/quantize.py): pow2-scale roundtrip error
+bounds, bit-exact idempotence (the exact-replay invariant), stochastic-
+rounding unbiasedness, wire byte accounting, host<->jax parity, and the
+codec registry.  Property-test variants run when hypothesis is
+installed; the deterministic seeded versions always run."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import (E_MAX, E_MIN, QMAX, FloatWire,
+                                 IdentityCodec, IntCodec, QuantSpec, Wire,
+                                 decode, encode, make_codec, pack_codes,
+                                 pow2_exponent, quantize_roundtrip,
+                                 unpack_codes, wire_nbytes)
+
+
+def rand(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+# -- exponent + grid geometry ------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_pow2_exponent_minimal_and_covering(bits):
+    qmax = QMAX[bits]
+    amax = np.abs(rand(256, 1.0, 0)) * np.float32(10.0) ** \
+        np.linspace(-6, 6, 256, dtype=np.float32)
+    e = pow2_exponent(amax, bits)
+    cover = np.ldexp(np.float32(qmax), e) >= amax
+    assert cover.all()  # qmax * 2^e covers amax ...
+    tighter = np.ldexp(np.float32(qmax), e - 1) >= amax
+    assert not tighter[(e > E_MIN) & (amax > 0)].any()  # ... minimally
+    assert e.dtype == np.int32 and (e >= E_MIN).all() and (e <= E_MAX).all()
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_roundtrip_error_bounded_by_grid_step(bits, stochastic):
+    """|x_hat - x| <= 2^e per chunk, and 2^e <= 2*amax/qmax by exponent
+    minimality — the quantizer's accuracy contract at any scale."""
+    for scale in (1e-6, 1e-2, 1.0, 3e4):
+        x = rand(512, scale, 3)
+        rng = np.random.default_rng(7) if stochastic else None
+        w = encode(x, bits, chunk=8, rng=rng)
+        x_hat = decode(w)
+        step = np.ldexp(np.float32(1), w.exps.astype(np.int32))
+        err = np.abs(x_hat - x).reshape(-1, 8)
+        bound = step[:, None] * (1.0 if stochastic else 0.5)
+        assert (err <= bound + 1e-30).all()
+        amax = np.abs(x).reshape(-1, 8).max(1)
+        assert (step <= 2.0 * amax / QMAX[bits] + 1e-30).all()
+        assert (np.abs(w.codes) <= QMAX[bits]).all()
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_idempotence_bit_exact(bits):
+    """decode(encode(x_hat)) == x_hat bitwise for on-grid x_hat — under
+    nearest AND stochastic re-encoding (on-grid values have no
+    fractional part to randomize).  This is the exact-replay keystone:
+    the server's re-encode of what the client applied is lossless."""
+    x = rand(257, 1.0, 5)  # odd n: exercises int4 nibble padding
+    for chunk in (1, 8):
+        x_hat = decode(encode(x, bits, chunk, np.random.default_rng(0)))
+        again = decode(encode(x_hat, bits, chunk))  # nearest
+        np.testing.assert_array_equal(again, x_hat)
+        rng = np.random.default_rng(123)
+        stoch = decode(encode(x_hat, bits, chunk, rng))
+        np.testing.assert_array_equal(stoch, x_hat)
+        # and the cycle is stable forever after
+        np.testing.assert_array_equal(decode(encode(again, bits, chunk)),
+                                      x_hat)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_stochastic_rounding_unbiased(bits):
+    """mean over many independent stochastic roundtrips converges to x
+    (within 5 sigma of the Bernoulli variance bound)."""
+    x = rand(64, 1.0, 11)
+    n_rep = 3000
+    rng = np.random.default_rng(42)
+    acc = np.zeros_like(x, np.float64)
+    step = None
+    for _ in range(n_rep):
+        w = encode(x, bits, chunk=64, rng=rng)
+        acc += decode(w)
+        step = np.ldexp(np.float64(1), int(w.exps[0]))
+    mean = acc / n_rep
+    sigma = step / 2 / math.sqrt(n_rep)  # Bernoulli var <= (step/2)^2
+    assert np.abs(mean - x).max() <= 5 * sigma
+
+
+# -- wire format -------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("n", [1, 7, 8, 257])
+def test_wire_bytes_match_serialization(bits, n):
+    x = rand(n, 1.0, n)
+    for chunk in (1, 4):
+        w = encode(x, bits, chunk)
+        assert w.nbytes == wire_nbytes(n, bits, chunk) == len(w.tobytes())
+    ident = IdentityCodec()
+    fw = ident.encode(x)
+    assert fw.nbytes == ident.nbytes(n) == 4 * n == len(fw.tobytes())
+
+
+def test_pack_unpack_roundtrip_odd_n():
+    rng = np.random.default_rng(0)
+    for bits in (4, 8):
+        codes = rng.integers(-QMAX[bits], QMAX[bits] + 1,
+                             size=13).astype(np.int8)
+        raw = pack_codes(codes, bits)
+        assert len(raw) == (13 * bits + 7) // 8
+        np.testing.assert_array_equal(unpack_codes(raw, bits, 13), codes)
+
+
+def test_wire_decode_preserves_shape():
+    x = rand(12, 1.0, 2).reshape(3, 4)
+    w = encode(x, 8, chunk=4)
+    assert isinstance(w, Wire) and decode(w).shape == (3, 4)
+
+
+# -- host <-> jax parity (the server re-encode must bit-match the
+# client's in-loop roundtrip) ------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_jax_nearest_bitmatches_host_codec(bits):
+    x = rand(512, 1.0, 17)
+    host = decode(encode(x, bits, chunk=1))
+    dev = np.asarray(jax.jit(
+        lambda g: quantize_roundtrip(g, jax.random.key(0), bits,
+                                     stochastic=False))(jnp.asarray(x)))
+    np.testing.assert_array_equal(dev, host)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_jax_stochastic_passes_on_grid_values_unchanged(bits):
+    """Client-side stochastic roundtrip applied to an already-on-grid
+    value is the identity for ANY key — so the server's nearest
+    re-encode of the client's applied value is bit-exact."""
+    x_hat = decode(encode(rand(128, 1.0, 23), bits, chunk=1,
+                          rng=np.random.default_rng(1)))
+    for seed in (0, 1, 99):
+        out = np.asarray(quantize_roundtrip(
+            jnp.asarray(x_hat), jax.random.key(seed), bits,
+            stochastic=True))
+        np.testing.assert_array_equal(out, x_hat)
+
+
+def test_quant_spec_uses_fold_stream():
+    """QuantSpec.apply folds QUANT_FOLD into the step key: the rounding
+    noise stream is disjoint from the raw key's other uses but still a
+    pure function of it (resume-safe)."""
+    g = jnp.asarray(rand(32, 1.0, 31))
+    key = jax.random.key(4)
+    spec = QuantSpec(bits=8, stochastic=True)
+    a, b = spec.apply(g, key), spec.apply(g, key)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    from repro.core.quantize import QUANT_FOLD
+    direct = quantize_roundtrip(g, jax.random.fold_in(key, QUANT_FOLD),
+                                8, True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(direct))
+
+
+# -- codec registry ----------------------------------------------------------
+
+def test_make_codec_parsing():
+    assert isinstance(make_codec("none"), IdentityCodec)
+    assert isinstance(make_codec(""), IdentityCodec)
+    c8 = make_codec("int8")
+    assert isinstance(c8, IntCodec) and c8.bits == 8 and c8.stochastic
+    c4n = make_codec("int4-nearest")
+    assert c4n.bits == 4 and not c4n.stochastic
+    assert c4n.spec == "int4-nearest" and c8.spec == "int8"
+    assert make_codec("int8").jax_spec() == QuantSpec(8, True)
+    assert make_codec("none").jax_spec() is None
+    with pytest.raises(ValueError):
+        make_codec("int16")
+    with pytest.raises(ValueError):
+        IntCodec(bits=3)
+    with pytest.raises(ValueError):
+        IntCodec(bits=8, chunk=0)
+
+
+def test_identity_codec_roundtrip_is_bitwise():
+    x = rand(64, 1.0, 41)
+    c = make_codec("none")
+    w = c.encode(x)
+    assert isinstance(w, FloatWire)
+    np.testing.assert_array_equal(c.decode(w), x)
+
+
+# -- hypothesis property tests (skipped when hypothesis is absent) -----------
+
+def test_property_roundtrip_invariants():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    given, settings = hyp.given, hyp.settings
+
+    @given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                    min_size=1, max_size=64),
+           st.sampled_from([4, 8]), st.integers(1, 8),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=200, deadline=None)
+    def check(xs, bits, chunk, seed):
+        x = np.asarray(xs, np.float32)
+        rng = np.random.default_rng(seed)
+        w = encode(x, bits, chunk, rng)
+        x_hat = decode(w)
+        # error bound per chunk
+        n_chunks = w.exps.size
+        pad = n_chunks * chunk - x.size
+        g = np.concatenate([x, np.zeros((pad,), np.float32)])
+        step = np.ldexp(np.float32(1), w.exps.astype(np.int32))
+        err = np.abs(np.concatenate([x_hat.ravel(),
+                                     np.zeros((pad,), np.float32)]) - g)
+        assert (err.reshape(n_chunks, chunk) <= step[:, None]).all()
+        # idempotence, both re-encode modes
+        np.testing.assert_array_equal(decode(encode(x_hat, bits, chunk)),
+                                      x_hat)
+        np.testing.assert_array_equal(
+            decode(encode(x_hat, bits, chunk, np.random.default_rng(1))),
+            x_hat)
+        # byte accounting
+        assert w.nbytes == wire_nbytes(x.size, bits, chunk) \
+            == len(w.tobytes())
+
+    check()
+
+
+def test_property_unbiasedness():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.floats(-100.0, 100.0, allow_nan=False, width=32),
+               st.sampled_from([4, 8]))
+    @hyp.settings(max_examples=30, deadline=None)
+    def check(x0, bits):
+        x = np.full((16,), x0, np.float32)
+        rng = np.random.default_rng(0)
+        n_rep = 2000
+        acc = np.zeros((16,), np.float64)
+        step = None
+        for _ in range(n_rep):
+            w = encode(x, bits, chunk=16, rng=rng)
+            acc += decode(w)
+            step = np.ldexp(np.float64(1), int(w.exps[0]))
+        sigma = step / 2 / math.sqrt(16 * n_rep)  # pooled over coords
+        assert abs(acc.mean() / n_rep - np.float64(x0)) <= 6 * sigma
+
+    check()

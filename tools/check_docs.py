@@ -28,6 +28,7 @@ CLIS = {
     "repro.analysis": "src/repro/analysis/cli.py",
     "repro.kernels.autotune": "src/repro/kernels/autotune.py",
     "benchmarks.fault_bench": "benchmarks/fault_bench.py",
+    "benchmarks.fl_scale_bench": "benchmarks/fl_scale_bench.py",
 }
 
 

@@ -15,6 +15,10 @@ Then the drill asserts B's latest checkpoint is at round ``k`` and that
 C's final checkpoint is **bit-identical** to A's: every array leaf, the
 round counter, the CommLog byte totals, the per-client data pointers,
 the VPCS flags and the eval history.  A SIGKILL costs zero information.
+``--sample-frac``/``--quantize`` run the same drill under fleet-scale
+client sampling and a quantized uplink: the survivor must restore the
+sampler's RNG state (checkpoint meta ``sampler``, compared bit-for-bit
+below) so it re-draws the killed round's cohort identically.
 
 Mesh-reshape recovery: ``--mesh-b 2x2`` runs the victim sharded on a
 2x2 FLShardPlan while A and C stay unsharded (or pick any combination
@@ -61,6 +65,10 @@ def train_cmd(a, ckpt_dir: str, *, mesh=None, kill_at=None, resume=False):
            "--seed", str(a.seed), "--eval-every", str(a.eval_every),
            "--zo-backend", "ref",
            "--checkpoint-dir", ckpt_dir, "--checkpoint-every", "1"]
+    if a.sample_frac < 1.0:
+        cmd += ["--sample-frac", str(a.sample_frac)]
+    if a.quantize != "none":
+        cmd += ["--quantize", a.quantize]
     if mesh:
         cmd += ["--mesh", mesh]
     if kill_at is not None:
@@ -95,7 +103,7 @@ def compare_finals(path_a: str, path_c: str) -> dict:
                                                     leaves_c[k])]
     checks["leaves_bitmatch"] = checks["leaf_sets_equal"] and not diff
     for field in ("round", "up_bytes", "down_bytes", "ptrs",
-                  "early_stopped", "history", "pending"):
+                  "early_stopped", "history", "pending", "sampler"):
         checks[f"meta_{field}_equal"] = meta_a.get(field) == meta_c.get(field)
     if diff:
         checks["first_diff_leaf"] = diff[0]
@@ -115,6 +123,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=2)
+    ap.add_argument("--sample-frac", type=float, default=1.0,
+                    help="run the drill under fleet-scale client sampling "
+                         "(the survivor must restore the sampler RNG state "
+                         "to re-draw the killed round's cohort)")
+    ap.add_argument("--quantize", default="none",
+                    help="run the drill under a quantized uplink codec "
+                         "(none|int8|int4[-nearest])")
     ap.add_argument("--mesh-a", default=None, help="mesh for the reference")
     ap.add_argument("--mesh-b", default=None,
                     help="mesh for the killed run (e.g. 2x2: die sharded, "
